@@ -1,0 +1,41 @@
+"""Fig. 7 reproduction: search convergence (best cycles vs evaluations)
+for MCTS / GA / random / grid on each method. FuseMax is excluded (its
+tiling was manually selected in the paper)."""
+
+from __future__ import annotations
+
+from repro.sim import EDGE_HW, PAPER_NETWORKS, search_tiling
+
+NETS = ("bert-base-t5-base", "t5-mini-small", "vit-b-16")
+STRATEGIES = ("random", "mcts", "ga")
+METHODS = ("mas", "flat")
+
+
+def run(iters=300):
+    curves = {}
+    for net in NETS:
+        w = PAPER_NETWORKS[net]
+        for method in METHODS:
+            grid = search_tiling(method, w, EDGE_HW, "grid")
+            for strat in STRATEGIES:
+                r = search_tiling(method, w, EDGE_HW, strat, iters=iters)
+                curves[(net, method, strat)] = {
+                    "history": r.history,
+                    "final": r.result.cycles,
+                    "optimum": grid.result.cycles,
+                    "evals_to_optimum": next(
+                        (i for i, c in r.history
+                         if c <= grid.result.cycles * 1.02),
+                        None,
+                    ),
+                }
+    return curves
+
+
+def main(emit):
+    curves = run()
+    for (net, method, strat), c in curves.items():
+        gap = c["final"] / c["optimum"]
+        emit(f"fig7/{net}/{method}/{strat}", 0.0,
+             f"final/opt={gap:.3f} evals_to_opt={c['evals_to_optimum']}")
+    return curves

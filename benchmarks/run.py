@@ -1,0 +1,37 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call is simulated time
+for the edge-device tables, host wall-time for the kernel micro-bench).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    lines: list[str] = []
+
+    def emit(name: str, us: float, derived: str = ""):
+        line = f"{name},{us:.3f},{derived}"
+        lines.append(line)
+        print(line, flush=True)
+
+    print("name,us_per_call,derived")
+    from benchmarks import table2_cycles
+    table2_cycles.main(emit)
+    from benchmarks import table3_energy
+    table3_energy.main(emit)
+    from benchmarks import dram_access
+    dram_access.main(emit)
+    from benchmarks import fig7_search
+    fig7_search.main(emit)
+    from benchmarks import seq_limit
+    seq_limit.main(emit)
+    from benchmarks import kernel_bench
+    kernel_bench.main(emit)
+    print(f"# {len(lines)} benchmark rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

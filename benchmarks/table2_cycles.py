@@ -1,0 +1,50 @@
+"""Table 2 reproduction: execution cycles + speedups, 6 methods x 12
+networks, each method's tiling found by the offline search (§4.2)."""
+
+from __future__ import annotations
+
+import math
+
+from repro.sim import EDGE_HW, PAPER_NETWORKS, search_tiling
+from repro.sim.workload import PAPER_TABLE2_CYCLES, PAPER_TABLE2_ORDER
+
+PAPER_GEOMEANS = {"layerwise": 5.09, "softpipe": 2.78, "flat": 1.70,
+                  "tileflow": 1.31, "fusemax": 1.27}
+
+
+def run(strategy: str = "grid"):
+    rows = []
+    speedups: dict[str, list[float]] = {}
+    for name, w in PAPER_NETWORKS.items():
+        res = {m: search_tiling(m, w, EDGE_HW, strategy)
+               for m in PAPER_TABLE2_ORDER}
+        cyc = {m: r.result.cycles for m, r in res.items()}
+        paper = dict(zip(PAPER_TABLE2_ORDER, PAPER_TABLE2_CYCLES[name]))
+        row = {"network": name}
+        for m in PAPER_TABLE2_ORDER:
+            row[f"{m}_Mcyc"] = cyc[m] / 1e6
+            row[f"{m}_paper_Mcyc"] = paper[m]
+        for m in PAPER_TABLE2_ORDER[:-1]:
+            s = cyc[m] / cyc["mas"]
+            row[f"speedup_vs_{m}"] = s
+            speedups.setdefault(m, []).append(s)
+        row["tiling"] = str(res["mas"].tiling)
+        rows.append(row)
+    geo = {
+        m: math.exp(sum(math.log(x) for x in v) / len(v))
+        for m, v in speedups.items()
+    }
+    return rows, geo
+
+
+def main(emit):
+    rows, geo = run()
+    for r in rows:
+        us = r["mas_Mcyc"] * 1e6 / EDGE_HW.freq_ghz / 1e3  # cycles -> us
+        emit(f"table2/{r['network']}", us,
+             f"mas={r['mas_Mcyc']:.3f}Mcyc paper={r['mas_paper_Mcyc']:.3f} "
+             f"vsFLAT={r['speedup_vs_flat']:.2f}x")
+    for m, g in geo.items():
+        emit(f"table2/geomean_speedup_vs_{m}", 0.0,
+             f"ours={g:.2f}x paper={PAPER_GEOMEANS[m]}x")
+    return rows, geo

@@ -1,0 +1,28 @@
+"""Reproduce the paper's headline tables on the edge-device simulator.
+
+    PYTHONPATH=src python examples/edge_sim_paper_tables.py
+"""
+
+from benchmarks.table2_cycles import run as run_t2
+from benchmarks.table3_energy import run as run_t3
+
+rows, geo = run_t2()
+print("== Table 2: cycles (ours vs paper, 10^6) ==")
+hdr = ("network", "layerwise", "flat", "mas", "speedup_vs_flat")
+print(f"{hdr[0]:24s} {hdr[1]:>16s} {hdr[2]:>16s} {hdr[3]:>16s} {hdr[4]:>8s}")
+for r in rows:
+    print(f"{r['network']:24s} "
+          f"{r['layerwise_Mcyc']:6.3f}({r['layerwise_paper_Mcyc']:6.3f}) "
+          f"{r['flat_Mcyc']:6.3f}({r['flat_paper_Mcyc']:6.3f}) "
+          f"{r['mas_Mcyc']:6.3f}({r['mas_paper_Mcyc']:6.3f}) "
+          f"{r['speedup_vs_flat']:6.2f}x")
+print("geomean speedups:",
+      {m: f"{g:.2f}x" for m, g in geo.items()})
+
+rows3, mean3 = run_t3()
+print("\n== Table 3: energy (ours vs paper, 10^9 pJ) ==")
+for r in rows3:
+    print(f"{r['network']:24s} mas={r['mas_GJp']:6.2f}"
+          f"({r['mas_paper_GJp']:6.2f})  "
+          f"save_vs_layerwise={r['savings_vs_layerwise_pct']:5.1f}%")
+print("mean savings:", {m: f"{v:.1f}%" for m, v in mean3.items()})

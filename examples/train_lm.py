@@ -1,0 +1,28 @@
+"""End-to-end driver: train a ~100M-param qwen3-family LM for a few
+hundred steps on the synthetic pipeline, with checkpointing + restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(~100M params: d_model=512, 28 layers of the qwen3 block, vocab 32k-ish
+via the smoke family scaled up. Runs on CPU; the same flags drive the
+production mesh on a fleet.)
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    train_main([
+        "--arch", "qwen3-1.7b", "--smoke",
+        "--d-model", "512", "--layers", "8",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "256", "--lr", "3e-3",
+        "--ckpt-dir", args.ckpt_dir, "--save-every", "100",
+        "--compression", "none",
+    ])

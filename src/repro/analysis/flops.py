@@ -1,0 +1,158 @@
+"""Analytic compute/memory models per (arch x shape) cell.
+
+Two tiers:
+* MODEL_FLOPS — "useful" flops: 6·N_active·D for training (2·N for
+  forward-only), plus the quadratic attention terms (which 6·N·D
+  excludes). This is the numerator of the roofline's
+  MODEL_FLOPS / HLO_FLOPs waste ratio.
+* MODEL_BYTES — expected HBM traffic of the BASELINE lowering, from
+  first principles: parameter reads (x2 extra for the nothing-saveable
+  remat policy in the backward), optimizer state traffic, per-layer
+  activation traffic, score-matrix round-trips of the chunked (MAS
+  dataflow) attention — the term the Pallas kernels delete — and KV
+  cache sweeps for decode.
+
+All numbers are GLOBAL (whole step, all chips); the roofline divides by
+chip count.
+"""
+
+from __future__ import annotations
+
+from repro.configs import ShapeCell
+from repro.models.common import ArchConfig
+
+
+def _attn_layers(cfg: ArchConfig) -> int:
+    return sum(k == "attn" for k in cfg.layer_kinds)
+
+
+def _ssd_layers(cfg: ArchConfig) -> int:
+    return sum(k == "ssd" for k in cfg.layer_kinds)
+
+
+def _rec_layers(cfg: ArchConfig) -> int:
+    return sum(k == "rec" for k in cfg.layer_kinds)
+
+
+def _attn_flops_fwd(cfg: ArchConfig, b: int, s_q: int, s_kv: int,
+                    include_encoder: bool = True) -> float:
+    """QK^T + PV for all attention layers (decoder self-attn)."""
+    if cfg.window is not None and cfg.block_pattern is not None:
+        s_kv = min(s_kv, cfg.window)
+    per_layer = 4.0 * b * cfg.num_heads * s_q * s_kv * cfg.hd
+    total = per_layer * _attn_layers(cfg)
+    if cfg.encoder_layers:
+        f = cfg.num_frontend_tokens
+        if include_encoder:
+            # encoder self-attention over the frontend frames
+            total += (4.0 * b * cfg.num_heads * f * f * cfg.hd
+                      * cfg.encoder_layers)
+        # decoder cross-attention
+        total += 4.0 * b * cfg.num_heads * s_q * f * cfg.hd * cfg.num_layers
+    return total
+
+
+def _ssd_flops_fwd(cfg: ArchConfig, b: int, s: int) -> float:
+    if cfg.ssm is None:
+        return 0.0
+    sm = cfg.ssm
+    di = sm.expand * cfg.d_model
+    nh = di // sm.head_dim
+    q = min(sm.chunk, s)
+    intra = 4.0 * b * s * q * nh * sm.head_dim      # CB^T scores + y_diag
+    states = 6.0 * b * s * nh * sm.head_dim * sm.d_state  # states/y_off
+    return (intra + states) * _ssd_layers(cfg)
+
+
+def model_flops(cfg: ArchConfig, cell: ShapeCell) -> float:
+    n_active = cfg.active_param_count()
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        tokens = b * s
+        base = 6.0 * n_active * tokens
+        extra = 3.0 * (_attn_flops_fwd(cfg, b, s, s)
+                       + _ssd_flops_fwd(cfg, b, s))
+        return base + extra
+    if cell.kind == "prefill":
+        tokens = b * s
+        return (2.0 * n_active * tokens
+                + _attn_flops_fwd(cfg, b, s, s)
+                + _ssd_flops_fwd(cfg, b, s))
+    # decode: one token per sequence against an s-long cache/state.
+    # The encoder ran at prefill: exclude (approximately) its share of
+    # the params from the per-token matmul count.
+    if cfg.encoder_layers:
+        frac = cfg.num_layers / (cfg.num_layers + cfg.encoder_layers)
+        n_active = int(n_active * frac)
+    base = 2.0 * n_active * b
+    attn = _attn_flops_fwd(cfg, b, 1, s, include_encoder=False)
+    ssd = 0.0
+    if cfg.ssm is not None:
+        sm = cfg.ssm
+        di = sm.expand * cfg.d_model
+        nh = di // sm.head_dim
+        ssd = 4.0 * b * nh * sm.head_dim * sm.d_state * _ssd_layers(cfg)
+    return base + attn + ssd
+
+
+def model_bytes(cfg: ArchConfig, cell: ShapeCell) -> dict[str, float]:
+    """Baseline HBM traffic decomposition (global bytes per step)."""
+    n = cfg.param_count()
+    b, s = cell.global_batch, cell.seq_len
+    d = cfg.d_model
+    out: dict[str, float] = {}
+    act_bpe = 2  # bf16 activations
+    if cell.kind == "train":
+        # params: fwd read + bwd read + remat re-read; grads w+r;
+        # adam mu/nu r+w each; master write (fp32 states)
+        out["params"] = n * (3 * 4 + 2 * 4 + 4 * 4 + 4)
+        # activations: ~12 tensor passes of (B,S,D) per layer, r+w
+        out["activations"] = (
+            cfg.num_layers * 12 * 2 * b * s * d * act_bpe * 1.5  # +remat
+        )
+        # chunked-attention score round trips (fp32), fwd + bwd recompute
+        skv = min(s, cfg.window) if (cfg.window and cfg.block_pattern) else s
+        out["scores"] = (
+            _attn_layers(cfg) * 3 * 2 * b * cfg.num_heads * s * skv * 4
+        )
+        out["logits"] = 3 * b * s * cfg.vocab_size * act_bpe
+    elif cell.kind == "prefill":
+        out["params"] = n * 4
+        out["activations"] = cfg.num_layers * 12 * 2 * b * s * d * act_bpe
+        skv = min(s, cfg.window) if (cfg.window and cfg.block_pattern) else s
+        out["scores"] = (
+            _attn_layers(cfg) * 2 * b * cfg.num_heads * s * skv * 4
+        )
+        out["cache_write"] = (
+            _attn_layers(cfg) * 2 * b * cfg.num_kv_heads
+            * min(s, cfg.window or s) * cfg.hd * act_bpe
+        )
+        out["logits"] = b * 1 * cfg.vocab_size * act_bpe
+    else:  # decode
+        out["params"] = n * 4
+        skv = min(s, cfg.window) if (cfg.window and cfg.block_pattern) else s
+        out["cache_read"] = (
+            _attn_layers(cfg) * 2 * b * cfg.num_kv_heads * skv * cfg.hd
+            * act_bpe
+        )
+        if cfg.encoder_layers:
+            out["cache_read"] += (
+                cfg.num_layers * 2 * b * cfg.num_kv_heads
+                * cfg.num_frontend_tokens * cfg.hd * act_bpe
+            )
+        if cfg.ssm is not None:
+            sm = cfg.ssm
+            di = sm.expand * cfg.d_model
+            nh = di // sm.head_dim
+            out["state"] = (
+                2 * _ssd_layers(cfg) * b * nh * sm.head_dim * sm.d_state * 4
+            )
+        if _rec_layers(cfg):
+            w = cfg.lru_width or d
+            out["state"] = out.get("state", 0) + (
+                2 * _rec_layers(cfg) * b * w * 4
+            )
+        out["activations"] = cfg.num_layers * 12 * 2 * b * 1 * d * act_bpe
+        out["logits"] = b * cfg.vocab_size * act_bpe
+    out["total"] = sum(out.values())
+    return out

@@ -1,0 +1,145 @@
+"""Roofline assembly: dry-run artifacts -> per-cell three-term analysis.
+
+    compute_term    = HLO_FLOPs_per_dev / peak_FLOPs          [s]
+    memory_term     = MODEL_BYTES / (chips * HBM_bw)          [s]
+    collective_term = collective_bytes_per_dev / link_bw      [s]
+
+HLO_FLOPs are the scan-corrected per-device counts from analysis.hlo;
+MODEL_BYTES is the analytic HBM-traffic model (flops.py) because
+cost_analysis byte counters inherit the scan undercount; collective
+bytes are scan-corrected per-device operand sums. Hardware: TPU v5e —
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (assignment
+constants).
+
+Usage:
+    PYTHONPATH=src python -m repro.analysis.roofline \
+        --dryrun experiments/dryrun/pod16x16 --out experiments/roofline.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.analysis.flops import model_bytes, model_flops
+from repro.configs import SHAPES, get_arch
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link
+
+
+def cell_roofline(rec: dict) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    arch, shape = rec["arch"], rec["shape"]
+    cfg = get_arch(arch)
+    cell = SHAPES[shape]
+    chips = rec["num_devices"]
+
+    hlo_flops_dev = rec["collectives"].get("flops_corrected") or rec[
+        "cost"
+    ].get("flops", 0.0)
+    coll_dev = rec["collectives"]["total_bytes"]
+    mf = model_flops(cfg, cell)
+    mb = model_bytes(cfg, cell)
+
+    compute_s = hlo_flops_dev / PEAK_FLOPS
+    memory_s = mb["total"] / (chips * HBM_BW)
+    collective_s = coll_dev / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful_ratio = mf / max(1.0, hlo_flops_dev * chips)
+    # roofline fraction: the IDEAL step time is set by whichever of the
+    # two hardware rooflines (compute at useful flops, HBM at the
+    # analytic minimal traffic) binds; fraction = ideal / achieved bound.
+    # Memory-bound cells (decode) thus score ~1.0 when their bound IS
+    # the minimal HBM traffic, instead of being penalized on a compute
+    # scale they can never reach.
+    ideal_s = max(mf / (chips * PEAK_FLOPS), memory_s)
+    return {
+        "arch": arch,
+        "shape": shape,
+        "chips": chips,
+        "hlo_flops_per_dev": hlo_flops_dev,
+        "collective_bytes_per_dev": coll_dev,
+        "model_flops": mf,
+        "model_bytes": mb["total"],
+        "bytes_breakdown": mb,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": bound,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_fraction": ideal_s / bound if bound > 0 else 0.0,
+        "memory_per_dev_bytes": rec.get("memory", {}),
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def suggest(row: dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("reduce collective bytes: reshard to cut gathers "
+                "(cache layout / SP) or compress")
+    if d == "memory":
+        bb = row["bytes_breakdown"]
+        top = max((k for k in bb if k != "total"), key=bb.get)
+        return f"cut HBM traffic: '{top}' dominates — fuse/kernel it"
+    if row["useful_flops_ratio"] < 0.5:
+        return "compute-bound with low useful ratio: reduce remat/recompute"
+    return "compute-bound near roofline: tune matmul layouts/precision"
+
+
+def load_dir(path: str) -> list[dict]:
+    rows = []
+    for fn in sorted(os.listdir(path)):
+        if fn.endswith(".json"):
+            with open(os.path.join(path, fn)) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    out = ["| arch | shape | compute_s | memory_s | collective_s | "
+           "dominant | MODEL/HLO flops | roofline frac | next move |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for rec in rows:
+        r = cell_roofline(rec)
+        if r is None:
+            reason = rec.get("reason", rec.get("error", ""))
+            out.append(f"| {rec['arch']} | {rec['shape']} | - | - | - | "
+                       f"{'skip' if rec.get('skipped') else 'FAIL'} | - | - "
+                       f"| {reason} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2%} | {suggest(r)} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun/pod16x16")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = load_dir(args.dryrun)
+    md = to_markdown(rows)
+    print(md)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md + "\n")
+        data = [cell_roofline(r) for r in rows]
+        with open(args.out.replace(".md", ".json"), "w") as f:
+            json.dump([d for d in data if d], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""internvl2-2b [vlm] — InternViT frontend (stub) + InternLM2 backbone.
+[arXiv:2404.16821; hf]
+
+The modality frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed patch embeddings (B, 256, D) that are prepended to
+the token embeddings.
+"""
+
+from repro.models.common import ArchConfig
+
+ARCH = ArchConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92553,
+    mlp="swiglu",
+    frontend="vision",
+    num_frontend_tokens=256,
+)
+
+SMOKE = ArchConfig(
+    name="internvl2-smoke",
+    family="vlm",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    mlp="swiglu",
+    frontend="vision",
+    num_frontend_tokens=8,
+    attn_impl="xla_full",
+)

@@ -1,0 +1,30 @@
+"""phi4-mini-3.8b [dense] — RoPE SwiGLU GQA. [arXiv:2412.08905; hf]"""
+
+from repro.models.common import ArchConfig
+
+ARCH = ArchConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=200064,
+    mlp="swiglu",
+)
+
+SMOKE = ArchConfig(
+    name="phi4-mini-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=96,
+    num_heads=6,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=192,
+    vocab_size=512,
+    mlp="swiglu",
+    attn_impl="xla_full",
+)

@@ -1,0 +1,88 @@
+"""Offline block-shape search for the Pallas kernels — the TPU analogue
+of the paper's §4.2 MCTS/grid tiling search.
+
+No hardware timing is available in this container, so candidates are
+scored with the same analytical machinery the edge simulator uses:
+per-Q-block MXU time vs HBM-traffic time (including the K/V re-fetch
+implied by the §4.3 streaming/overwrite regime), taking the max of the
+overlapped streams. On real TPUs the same scorer seeds the search and
+wall-clock timing refines it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.policy import (
+    DEFAULT_VMEM_BUDGET,
+    TilingConfig,
+    choose_attention_method,
+    flash_vmem_bytes,
+    mas_vmem_bytes,
+)
+
+# TPU v5e per-core constants (assignment values)
+MXU_FLOPS = 197e12
+HBM_BW = 819e9
+VPU_FLOPS = 4e12  # 8x128 VPU, ~2 ops/cycle/lane
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelChoice:
+    method: str
+    tiling: TilingConfig
+    est_seconds: float
+    mxu_s: float
+    hbm_s: float
+    vpu_s: float
+
+
+def _score(method: str, blk_q: int, blk_kv: int, *, b_h: int, n_q: int,
+           n_kv: int, e: int, itemsize: int) -> tuple[float, float, float]:
+    """(mxu_s, hbm_s, vpu_s) for the whole attention call."""
+    n_q_blocks = -(-n_q // blk_q) * b_h
+    flops = 4.0 * b_h * n_q * n_kv * e  # QK^T + PV
+    mxu = flops / MXU_FLOPS
+    # softmax stream on the VPU: ~6 passes over the score rows
+    vpu = 6.0 * b_h * n_q * n_kv / VPU_FLOPS
+    # HBM traffic: Q/O once; K/V per Q block unless resident
+    qo = 2 * b_h * n_q * e * itemsize
+    if method == "mas_resident":
+        kv = 2 * b_h * n_kv * e * itemsize
+    else:  # streamed / flash: K/V re-fetched for every Q row block
+        kv = 2 * b_h * n_kv * e * itemsize * max(1, n_q // blk_q)
+    hbm = (qo + kv) / HBM_BW
+    return mxu, hbm, vpu
+
+
+def tune_attention(*, b_h: int, n_q: int, n_kv: int, e: int,
+                   itemsize: int = 2,
+                   vmem_budget: int = DEFAULT_VMEM_BUDGET) -> KernelChoice:
+    """Grid search over MXU-aligned block shapes; Mosaic overlaps the
+    MXU/VPU/DMA streams, so cost = max of the three + ramp."""
+    best: KernelChoice | None = None
+    for blk_q in (64, 128, 256, 512):
+        if blk_q > n_q:
+            continue
+        for blk_kv in (128, 256, 512, 1024, 2048):
+            if blk_kv > n_kv:
+                continue
+            d = choose_attention_method(
+                n_kv=n_kv, e=e, itemsize=itemsize,
+                tiling=TilingConfig(blk_q, blk_kv, True),
+                vmem_budget=vmem_budget,
+            )
+            mxu, hbm, vpu = _score(
+                d.method, d.tiling.blk_q, blk_kv, b_h=b_h, n_q=n_q,
+                n_kv=n_kv, e=e, itemsize=itemsize,
+            )
+            # pipeline ramp: one DMA of a K/V tile + one MXU tile pass
+            ramp = (2 * blk_kv * e * itemsize) / HBM_BW
+            est = max(mxu, hbm, vpu) + ramp
+            cand = KernelChoice(d.method, TilingConfig(
+                d.tiling.blk_q, blk_kv, d.tiling.kv_resident
+            ), est, mxu, hbm, vpu)
+            if best is None or cand.est_seconds < best.est_seconds:
+                best = cand
+    assert best is not None, "no feasible block shape"
+    return best

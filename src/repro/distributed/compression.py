@@ -1,0 +1,65 @@
+"""Gradient compression for cross-pod all-reduce with error feedback.
+
+At 1000+ node scale the data-parallel gradient all-reduce over the
+inter-pod links dominates the collective term (the 'pod' axis has the
+thinnest bandwidth), so grads are quantized before reduction:
+
+* "bf16": truncate mantissa (2x wire saving), unbiased enough that no
+  feedback is needed.
+* "int8": per-leaf symmetric scaling (4x saving vs fp32) with ERROR
+  FEEDBACK — the quantization residual is carried to the next step, so
+  compression error accumulates to zero instead of biasing the update
+  (Seide et al.; 1-bit Adam lineage).
+
+In-graph we quantize -> (all-reduce happens in the quantized dtype on a
+real fleet; here XLA reduces the dequantized values, wire format noted in
+DESIGN.md) -> dequantize, so convergence behavior is exactly what the
+compressed run would see.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_bf16(grads):
+    return jax.tree.map(
+        lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads
+    )
+
+
+def _quant_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_int8_with_feedback(grads, err):
+    """Returns (dequantized grads as seen post-all-reduce, new err)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quant_int8(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g32 - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def apply_compression(grads, err, mode: str | None):
+    if mode is None or mode == "none":
+        return grads, err
+    if mode == "bf16":
+        return compress_bf16(grads), err
+    if mode == "int8":
+        return compress_int8_with_feedback(grads, err)
+    raise ValueError(mode)

@@ -1,0 +1,191 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs.
+
+Scheme (DESIGN.md §3): FSDP over 'data' + TP over 'model' + EP for MoE
+experts over 'model'; batch over ('pod', 'data'); decode KV caches
+sequence-sharded over 'model' (flash-decode split-K across chips — the
+GQA kv-head counts (1/8/16/20) don't divide model=16 uniformly, sequence
+does). Uneven head counts (e.g. 56 on 16 shards) rely on GSPMD padding.
+
+Rules are matched on parameter-path substrings, so new modules inherit
+sensible shardings by naming convention.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return n
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec axes that don't evenly divide the dim (input arrays must
+    shard evenly; GSPMD padding only covers intermediates). E.g. a 51866
+    vocab can't shard 16 ways -> replicate that dim."""
+    out = []
+    for i, axes in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            out.append(None)
+            continue
+        kept = tuple(a for a in ((axes,) if isinstance(axes, str) else axes)
+                     if a in mesh.axis_names)
+        size = _axis_size(mesh, kept)
+        if kept and size > 0 and shape[i] % size == 0:
+            out.append(kept if len(kept) > 1 else kept[0])
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# (path-regex, spec builder). First match wins; order matters.
+_PARAM_RULES: list[tuple[str, object]] = [
+    (r"embed$", ("model", None)),            # vocab-sharded embedding
+    (r"unembed$", (None, "model")),
+    (r"(^|/)w(q|k|v)$", ("data", "model")),
+    (r"(^|/)wo$", ("model", "data")),
+    (r"ffn/(w_gate|w_up)$", ("data", "model")),
+    (r"ffn/w_down$", ("model", "data")),
+    (r"shared/(w_gate|w_up)$", ("data", "model")),
+    (r"shared/w_down$", ("model", "data")),
+    (r"router$", (None, None)),
+    (r"ssd/w_in$", ("data", "model")),
+    (r"ssd/w_out$", ("model", "data")),
+    (r"rec/w_(x|gate|i|r)$", ("data", "model")),
+    (r"rec/w_out$", ("model", "data")),
+]
+
+
+def _moe_expert_spec(path: str, ndim: int):
+    # experts (E, D, F) / (E, F, D): experts over model, d_model over data
+    if path.endswith("w_gate") or path.endswith("w_up"):
+        return ("model", "data", None)
+    return ("model", None, "data")
+
+
+def param_spec(path: str, ndim: int, *, is_moe_expert: bool) -> P:
+    if is_moe_expert:
+        spec = _moe_expert_spec(path, ndim)
+        return P(*spec[:ndim])
+    for pat, spec in _PARAM_RULES:
+        if spec is None:
+            continue
+        if re.search(pat, path):
+            spec = tuple(spec)[-ndim:] if ndim < len(spec) else spec
+            return P(*spec)
+    return P()  # norms, biases, scalars: replicated
+
+
+def _tree_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for kp, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+        )
+        yield path, leaf
+
+
+def param_specs(params, mesh: Mesh | None = None,
+                policy: str = "tp_sp") -> object:
+    """Pytree of PartitionSpecs matching ``params``.
+
+    Scanned unit parameters have a leading stacked axis -> specs shift
+    right by one (leading axis replicated). With ``mesh``, specs are
+    fitted (non-dividing axes replicated). policy="fsdp" shards every
+    matrix's first non-stacked dim over ('data','model') instead of the
+    TP rules (small-dense archs — §Perf iter 5).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+        )
+        stacked = path.startswith("units/") or "encoder/" in path
+        is_moe_expert = bool(re.search(r"ffn/w_(gate|up|down)$", path)) and (
+            leaf.ndim - (1 if stacked else 0) == 3
+        )
+        ndim = leaf.ndim - (1 if stacked else 0)
+        if policy == "fsdp":
+            spec = P(("data", "model")) if ndim >= 2 else P()
+        elif policy == "sp_rep":
+            # replicated weights + pure sequence parallelism: right for
+            # forward-only serving of models whose bf16 weights fit HBM
+            # (no grads -> replication costs no collective traffic)
+            spec = P()
+        else:
+            spec = param_spec(path, ndim, is_moe_expert=is_moe_expert)
+        if stacked:
+            spec = P(None, *spec)
+        if mesh is not None:
+            spec = fit_spec(spec, leaf.shape, mesh)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(mesh: Mesh, *, with_frontend=False) -> dict:
+    b = P(batch_axes(mesh))
+    out = {"tokens": b, "labels": b}
+    if with_frontend:
+        out["frontend"] = P(batch_axes(mesh), None, None)
+    return out
+
+
+def cache_specs(cache, mesh: Mesh) -> object:
+    """Sequence-sharded KV caches; recurrent states batch-sharded."""
+    ba = batch_axes(mesh)
+
+    def spec_for(path: str, leaf) -> P:
+        if re.search(r"(^|/)(k|v|mem_k|mem_v)$", path):
+            s = (ba, None, "model", None)         # (B, Hkv, S, E)
+        elif path.endswith("conv"):
+            s = (ba, None, "model")               # (B, K, C) channels TP
+        elif path.endswith("rnn"):
+            s = (ba, "model")                     # (B, W)
+        elif path.endswith("state"):
+            s = (ba, "model", None, None)         # (B, H, P, N)
+        else:
+            s = (ba,)
+        stacked = path.startswith("units/")
+        s = s[: leaf.ndim - (1 if stacked else 0)]
+        return P(None, *s) if stacked else P(*s)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+        )
+        specs.append(fit_spec(spec_for(path, leaf), leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(p_specs) -> dict:
+    return {
+        "mu": p_specs,
+        "nu": p_specs,
+        "step": P(),
+    }
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

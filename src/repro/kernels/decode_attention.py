@@ -1,0 +1,115 @@
+"""Split-KV single-token decode attention (flash-decode style).
+
+For the ``decode_*`` / ``long_*`` serving shapes: one new query token per
+sequence attends to a KV cache of length S, masked at ``kv_len``. The MXU
+row dimension is the GQA *group* (query heads sharing one kv head), padded
+to the sublane minimum; the KV cache is swept in ``blk_kv`` tiles with the
+usual online max/sum combine. Grid = (B*Hkv, n_kv_blocks).
+
+Inputs pre-grouped to q: (B*Hkv, G, E), caches: (B*Hkv, S, E) by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+    blk_kv, n_kv_blocks, sm_scale
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = kvlen_ref[0]
+    col0 = j * blk_kv
+
+    @pl.when(col0 < kv_len)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (G, E)
+        k_tile = k_ref[0].astype(jnp.float32)  # (blk_kv, E)
+        s = jax.lax.dot_general(
+            q, k_tile, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale
+        g = q.shape[0]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (g, blk_kv), 1) + col0
+        s = jnp.where(cols < kv_len, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _writeback():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_flat(
+    q: jax.Array,  # (B*Hkv, G, E) — G = padded GQA group
+    k: jax.Array,  # (B*Hkv, S, E)
+    v: jax.Array,  # (B*Hkv, S, E)
+    kv_len: jax.Array,  # () int32
+    *,
+    blk_kv: int,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, g, e = q.shape
+    _, s_len, _ = k.shape
+    assert s_len % blk_kv == 0
+    scale = (e**-0.5) if sm_scale is None else sm_scale
+    n_kv_blocks = s_len // blk_kv
+
+    kernel = functools.partial(
+        _decode_kernel, blk_kv=blk_kv, n_kv_blocks=n_kv_blocks, sm_scale=scale
+    )
+    grid = (bh, n_kv_blocks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, e), lambda bh_, j, *_: (bh_, 0, 0)),
+            pl.BlockSpec((1, blk_kv, e), lambda bh_, j, *_: (bh_, j, 0)),
+            pl.BlockSpec((1, blk_kv, e), lambda bh_, j, *_: (bh_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, e), lambda bh_, j, *_: (bh_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, e), jnp.float32),
+        ],
+    )
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")
+        )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, g, e), q.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(jnp.asarray(kv_len, jnp.int32).reshape(1), q, k, v)

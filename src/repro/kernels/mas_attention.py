@@ -1,0 +1,248 @@
+"""MAS-Attention Pallas TPU kernel — the paper-faithful dataflow.
+
+TPU adaptation of Alg. 1-4 (see DESIGN.md §2):
+
+* MAC unit -> MXU, VEC unit -> VPU. Both live in one TPU core; Mosaic
+  co-issues MXU and VPU work from a single fused kernel and overlaps the
+  DMA stream via the grid pipeline — the semi-synchronous two-stream
+  schedule is expressed structurally.
+* Row-granularity softmax: the FULL score row ``S in (blk_q, N)`` is
+  materialized in VMEM per Q-row block (fp32). No online-softmax rescaling —
+  that is the paper's exactness argument and its §5.6 memory limitation.
+* Multi-tiered tiling: Q is cut into ``blk_q`` row blocks (N_Q), K/V into
+  ``blk_kv`` sub-matrix tiles (N_{K,V}).
+
+Two variants realize the §4.3 proactive-overwrite policy:
+
+* ``kv_resident=True``  — K and V are pinned in VMEM for a whole (batch,
+  head): the paper's ideal regime when L1 fits the operands.
+* ``kv_resident=False`` — K/V tiles are streamed: every grid step a
+  (blk_kv, E) tile OVERWRITES the previous one in VMEM, and V is re-fetched
+  from HBM for the PV pass (the "evict the reloadable operand, reload,
+  redo" policy, expressed as dataflow; DRAM-read inflation matches §5.4.2).
+
+Inputs are pre-flattened to (B*H, N, E) by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _causal_tile_mask(blk_q: int, blk_kv: int, row0, col0):
+    rows = jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 0) + row0
+    cols = jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 1) + col0
+    return cols <= rows
+
+
+# ---------------------------------------------------------------------------
+# Variant 1: K/V resident in VMEM (paper's ideal regime)
+# ---------------------------------------------------------------------------
+
+
+def _mas_resident_kernel(
+    q_ref, k_ref, v_ref, o_ref, s_ref, *, blk_q, blk_kv, sm_scale, causal,
+    kv_len
+):
+    iq = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)  # (blk_q, E)
+    n = k_ref.shape[1]
+    nkv = n // blk_kv
+
+    # ---- Alg. 2: MAC stream, S tiles into the full on-chip row buffer ----
+    def s_body(j, _):
+        k_tile = k_ref[0, pl.ds(j * blk_kv, blk_kv), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k_tile, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale
+        if causal:
+            m = _causal_tile_mask(blk_q, blk_kv, iq * blk_q, j * blk_kv)
+            s = jnp.where(m, s, NEG_INF)
+        if kv_len is not None:
+            cols = jax.lax.broadcasted_iota(
+                jnp.int32, (blk_q, blk_kv), 1) + j * blk_kv
+            s = jnp.where(cols < kv_len, s, NEG_INF)
+        s_ref[:, pl.ds(j * blk_kv, blk_kv)] = s
+        return 0
+
+    jax.lax.fori_loop(0, nkv, s_body, 0, unroll=False)
+
+    # ---- Alg. 3: VEC stream, row-granularity softmax (exact, one pass) ----
+    s = s_ref[...]
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    s_ref[...] = p / l  # P_i kept on-chip (never spilled — §4.3 invariant)
+
+    # ---- Alg. 4: MAC stream, O accumulation over V tiles ----
+    def o_body(j, acc):
+        v_tile = v_ref[0, pl.ds(j * blk_kv, blk_kv), :].astype(jnp.float32)
+        p_tile = s_ref[:, pl.ds(j * blk_kv, blk_kv)]
+        return acc + jax.lax.dot_general(
+            p_tile, v_tile, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    e = q_ref.shape[2]
+    acc = jax.lax.fori_loop(
+        0, nkv, o_body, jnp.zeros((blk_q, e), jnp.float32), unroll=False
+    )
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Variant 2: K/V streamed (proactive-overwrite regime)
+# ---------------------------------------------------------------------------
+
+
+def _mas_streamed_kernel(
+    q_ref, k_ref, v_ref, o_ref, s_ref, acc_ref, *, blk_q, blk_kv, nkv,
+    sm_scale, causal, kv_len
+):
+    iq = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j < nkv)
+    def _s_pass():
+        # MAC stream: this K tile overwrites the previous one in VMEM.
+        q = q_ref[0].astype(jnp.float32)
+        k_tile = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k_tile, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale
+        if causal:
+            m = _causal_tile_mask(blk_q, blk_kv, iq * blk_q, j * blk_kv)
+            s = jnp.where(m, s, NEG_INF)
+        if kv_len is not None:
+            cols = jax.lax.broadcasted_iota(
+                jnp.int32, (blk_q, blk_kv), 1) + j * blk_kv
+            s = jnp.where(cols < kv_len, s, NEG_INF)
+        s_ref[:, pl.ds(j * blk_kv, blk_kv)] = s
+
+    @pl.when(j == nkv)
+    def _softmax():
+        # VEC stream: full-row softmax once all S tiles landed.
+        s = s_ref[...]
+        m = jnp.max(s, axis=1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=1, keepdims=True)
+        s_ref[...] = p / l
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j >= nkv)
+    def _pv_pass():
+        # MAC stream resumes: V tiles are RE-FETCHED from HBM (the reload
+        # after overwrite) and accumulated.
+        jj = j - nkv
+        p_tile = s_ref[:, pl.ds(jj * blk_kv, blk_kv)]
+        v_tile = v_ref[0].astype(jnp.float32)
+        acc_ref[...] += jax.lax.dot_general(
+            p_tile, v_tile, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == 2 * nkv - 1)
+    def _writeback():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders
+# ---------------------------------------------------------------------------
+
+
+def mas_attention_flat(
+    q: jax.Array,  # (BHq, Nq, E)
+    k: jax.Array,  # (BHkv, Nkv, E)
+    v: jax.Array,  # (BHkv, Nkv, E)
+    *,
+    blk_q: int,
+    blk_kv: int,
+    causal: bool = False,
+    sm_scale: float | None = None,
+    kv_resident: bool = True,
+    kv_len: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    bhq, nq, e = q.shape
+    bhkv, nkv_len, _ = k.shape
+    assert bhq % bhkv == 0
+    group = bhq // bhkv
+    assert nq % blk_q == 0, (nq, blk_q)
+    assert nkv_len % blk_kv == 0, (nkv_len, blk_kv)
+    scale = (e**-0.5) if sm_scale is None else sm_scale
+    n_q_blocks = nq // blk_q
+    n_kv_blocks = nkv_len // blk_kv
+    if kv_len is not None and kv_len >= nkv_len:
+        kv_len = None  # no padding — skip the mask
+
+    out_shape = jax.ShapeDtypeStruct((bhq, nq, e), q.dtype)
+    q_spec = pl.BlockSpec((1, blk_q, e), lambda bh, iq, *_: (bh, iq, 0))
+    o_spec = pl.BlockSpec((1, blk_q, e), lambda bh, iq, *_: (bh, iq, 0))
+
+    if kv_resident:
+        kernel = functools.partial(
+            _mas_resident_kernel,
+            blk_q=blk_q, blk_kv=blk_kv, sm_scale=scale, causal=causal,
+            kv_len=kv_len,
+        )
+        grid = (bhq, n_q_blocks)
+        kv_spec = pl.BlockSpec(
+            (1, nkv_len, e), lambda bh, iq: (bh // group, 0, 0)
+        )
+        scratch = [pltpu.VMEM((blk_q, nkv_len), jnp.float32)]
+        dimension_semantics = ("arbitrary", "arbitrary")
+    else:
+        kernel = functools.partial(
+            _mas_streamed_kernel,
+            blk_q=blk_q, blk_kv=blk_kv, nkv=n_kv_blocks, sm_scale=scale,
+            causal=causal, kv_len=kv_len,
+        )
+        grid = (bhq, n_q_blocks, 2 * n_kv_blocks)
+        last = n_kv_blocks - 1
+        kv_k_spec = pl.BlockSpec(
+            (1, blk_kv, e),
+            lambda bh, iq, j: (bh // group, jnp.minimum(j, last), 0),
+        )
+        kv_v_spec = pl.BlockSpec(
+            (1, blk_kv, e),
+            lambda bh, iq, j: (
+                bh // group,
+                jnp.clip(j - n_kv_blocks, 0, last),
+                0,
+            ),
+        )
+        scratch = [
+            pltpu.VMEM((blk_q, nkv_len), jnp.float32),
+            pltpu.VMEM((blk_q, e), jnp.float32),
+        ]
+        dimension_semantics = ("arbitrary", "arbitrary", "arbitrary")
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=dimension_semantics
+        )
+    if kv_resident:
+        in_specs = [q_spec, kv_spec, kv_spec]
+    else:
+        in_specs = [q_spec, kv_k_spec, kv_v_spec]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(q, k, v)

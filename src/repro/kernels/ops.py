@@ -1,0 +1,161 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles layout flattening (B, H, N, E) -> (B*H, N, E), GQA grouping,
+padding to block multiples (masked via static kv_len), interpret-mode
+defaulting on CPU, and method dispatch through the §4.3 policy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import (
+    DEFAULT_VMEM_BUDGET,
+    TilingConfig,
+    choose_attention_method,
+)
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_flat
+from repro.kernels.flash_attention import flash_attention_flat
+from repro.kernels.mas_attention import mas_attention_flat
+
+
+def _default_interpret(interpret: bool | None) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _sublane_multiple(dtype) -> int:
+    # TPU minor-most-2 tiling: fp32 -> 8, bf16 -> 16, int8/fp8 -> 32.
+    return {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "sm_scale", "method", "blk_q", "blk_kv",
+        "kv_resident", "interpret", "vmem_budget",
+    ),
+)
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    method: str = "auto",  # auto | mas | mas_resident | mas_streamed | flash | ref
+    blk_q: int = 128,
+    blk_kv: int = 512,
+    kv_resident: bool | None = None,
+    interpret: bool | None = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> jax.Array:
+    """Exact attention. q: (B, Hq, Nq, E); k, v: (B, Hkv, Nkv, E)."""
+    if method == "ref":
+        return ref.attention(
+            q, k, v, causal=causal, window=window, sm_scale=sm_scale
+        )
+    b, hq, nq, e = q.shape
+    _, hkv, nkv, _ = k.shape
+    interp = _default_interpret(interpret)
+
+    # Resolve method through the policy (§4.3 analogue).
+    if method == "auto" or method == "mas":
+        decision = choose_attention_method(
+            n_kv=nkv, e=e, itemsize=q.dtype.itemsize,
+            tiling=TilingConfig(blk_q, blk_kv, True),
+            vmem_budget=vmem_budget,
+            prefer="mas" if method == "mas" else "auto",
+        )
+        method = decision.method
+        blk_q, blk_kv = decision.tiling.blk_q, decision.tiling.blk_kv
+        if kv_resident is None:
+            kv_resident = decision.tiling.kv_resident
+    elif method == "mas_resident":
+        method, kv_resident = "mas_resident", True
+    elif method == "mas_streamed":
+        method, kv_resident = "mas_streamed", False
+
+    if window is not None and method.startswith("mas"):
+        # Sliding window needs per-block skip bookkeeping the paper's
+        # dataflow doesn't define; served by the flash kernel.
+        method = "flash"
+
+    # Pad to aligned blocks; padded KV masked via static kv_len.
+    sub = _sublane_multiple(q.dtype)
+    blk_q = -(-min(blk_q, nq) // sub) * sub  # round up to sublane multiple
+    blk_kv = -(-min(blk_kv, nkv) // 128) * 128  # round up to lane multiple
+    qf = q.reshape(b * hq, nq, e)
+    kf = k.reshape(b * hkv, nkv, e)
+    vf = v.reshape(b * hkv, nkv, e)
+    qf = _pad_to(qf, 1, blk_q)
+    kf = _pad_to(kf, 1, blk_kv)
+    vf = _pad_to(vf, 1, blk_kv)
+    kv_len = nkv if kf.shape[1] != nkv else None
+
+    common = dict(
+        blk_q=blk_q, blk_kv=blk_kv, causal=causal, sm_scale=sm_scale,
+        kv_len=kv_len, interpret=interp,
+    )
+    if method in ("mas_resident", "mas_streamed"):
+        of = mas_attention_flat(
+            qf, kf, vf, kv_resident=(method == "mas_resident"), **common
+        )
+    elif method == "flash":
+        of = flash_attention_flat(qf, kf, vf, window=window, **common)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return of[:, :nq].reshape(b, hq, nq, e)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sm_scale", "blk_kv", "interpret")
+)
+def decode_attention(
+    q: jax.Array,  # (B, Hq, E)
+    k_cache: jax.Array,  # (B, Hkv, S, E)
+    v_cache: jax.Array,  # (B, Hkv, S, E)
+    kv_len: jax.Array | int,
+    *,
+    sm_scale: float | None = None,
+    blk_kv: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-token decode against a (partially filled) KV cache."""
+    b, hq, e = q.shape
+    _, hkv, s_len, _ = k_cache.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    interp = _default_interpret(interpret)
+
+    sub = _sublane_multiple(q.dtype)
+    g_pad = max(group, sub)
+    # (B, Hkv, G, E): query heads grouped under their kv head.
+    qg = q.reshape(b, hkv, group, e)
+    qg = _pad_to(qg, 2, g_pad).reshape(b * hkv, g_pad, e)
+    kf = k_cache.reshape(b * hkv, s_len, e)
+    vf = v_cache.reshape(b * hkv, s_len, e)
+    blk = -(-min(blk_kv, s_len) // 128) * 128
+    kf = _pad_to(kf, 1, blk)
+    vf = _pad_to(vf, 1, blk)
+
+    of = decode_attention_flat(
+        qg, kf, vf, kv_len, blk_kv=blk, sm_scale=sm_scale, interpret=interp
+    )
+    return of[:, :group].reshape(b, hq, e)

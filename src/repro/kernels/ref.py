@@ -1,0 +1,164 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the golden references the Pallas kernels are validated against
+(the paper's "golden data check", §5.1). Everything is exact attention —
+MAS-Attention is an *exact* method, so kernels must match these up to
+accumulation-order noise.
+
+Shapes follow the paper's convention: Q, K, V are (B, H, N, E) with GQA
+allowed (H_kv <= H_q, H_q % H_kv == 0).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-finite instead of -inf: keeps padded rows NaN-free
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, Hkv, N, E) -> (B, Hkv * n_rep, N, E) by repeating each kv head."""
+    if n_rep == 1:
+        return x
+    b, h, n, e = x.shape
+    x = jnp.broadcast_to(x[:, :, None], (b, h, n_rep, n, e))
+    return x.reshape(b, h * n_rep, n, e)
+
+
+def attention_mask(
+    nq: int,
+    nkv: int,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Boolean (nq, nkv) mask; True = attend.
+
+    ``q_offset`` positions query row i at absolute position q_offset + i
+    (used for decode, where the single query sits at the end of the cache).
+    ``window`` is a causal sliding window: attend to keys in
+    (pos - window, pos]. ``window`` implies causal.
+    """
+    rows = jnp.arange(nq)[:, None] + q_offset
+    cols = jnp.arange(nkv)[None, :]
+    mask = jnp.ones((nq, nkv), dtype=bool)
+    if causal or window is not None:
+        mask = mask & (cols <= rows)
+    if window is not None:
+        mask = mask & (cols > rows - window)
+    return mask
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    kv_len: jax.Array | int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Exact attention oracle.
+
+    q: (B, Hq, Nq, E); k, v: (B, Hkv, Nkv, E). Computation in fp32,
+    output in q.dtype. ``kv_len`` masks cache positions >= kv_len
+    (decode with a partially-filled cache).
+    """
+    b, hq, nq, e = q.shape
+    _, hkv, nkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    scale = (e**-0.5) if sm_scale is None else sm_scale
+
+    s = jnp.einsum(
+        "bhqe,bhke->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = attention_mask(nq, nkv, causal=causal, window=window, q_offset=q_offset)
+    if kv_len is not None:
+        mask = mask & (jnp.arange(nkv)[None, :] < kv_len)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhke->bhqe", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    kv_len: jax.Array | int,
+    *,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Single-token decode oracle. q: (B, Hq, E); caches: (B, Hkv, S, E)."""
+    o = attention(
+        q[:, :, None, :],
+        k_cache,
+        v_cache,
+        causal=False,
+        sm_scale=sm_scale,
+        kv_len=kv_len,
+    )
+    return o[:, :, 0, :]
+
+
+def mas_attention_tiled(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    blk_q: int,
+    blk_kv: int,
+    causal: bool = False,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """jnp emulation of the exact MAS dataflow (Alg. 1-4) at tile granularity.
+
+    Identical math to ``attention`` but follows the paper's loop structure:
+    per Q-row block, full score rows are materialized (row-granularity
+    softmax, Alg. 3) with K/V consumed in ``blk_kv`` sub-tiles (Alg. 2/4).
+    Used by property tests to pin the Pallas kernel's accumulation order.
+    """
+    b, hq, nq, e = q.shape
+    _, hkv, nkv, _ = k.shape
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    scale = (e**-0.5) if sm_scale is None else sm_scale
+    assert nq % blk_q == 0 and nkv % blk_kv == 0
+
+    out = jnp.zeros((b, hq, nq, e), jnp.float32)
+    for i in range(nq // blk_q):
+        rows = slice(i * blk_q, (i + 1) * blk_q)
+        # Alg. 2: C_i tiles (MAC stream)
+        s_tiles = []
+        for j in range(nkv // blk_kv):
+            cols = slice(j * blk_kv, (j + 1) * blk_kv)
+            s = jnp.einsum(
+                "bhqe,bhke->bhqk",
+                q[:, :, rows].astype(jnp.float32),
+                k[:, :, cols].astype(jnp.float32),
+            ) * scale
+            if causal:
+                m = attention_mask(blk_q, blk_kv, causal=True,
+                                   q_offset=i * blk_q - j * blk_kv)
+                s = jnp.where(m[None, None], s, NEG_INF)
+            s_tiles.append(s)
+        s_row = jnp.concatenate(s_tiles, axis=-1)  # full row on-chip
+        # Alg. 3: row-granularity softmax (VEC stream) — no online rescale
+        p_row = jax.nn.softmax(s_row, axis=-1)
+        # Alg. 4: O_i accumulation over V tiles (MAC stream)
+        acc = jnp.zeros((b, hq, blk_q, e), jnp.float32)
+        for j in range(nkv // blk_kv):
+            cols = slice(j * blk_kv, (j + 1) * blk_kv)
+            acc = acc + jnp.einsum(
+                "bhqk,bhke->bhqe",
+                p_row[..., cols],
+                v[:, :, cols].astype(jnp.float32),
+            )
+        out = out.at[:, :, rows].set(acc)
+    return out.astype(q.dtype)

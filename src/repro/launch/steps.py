@@ -1,0 +1,236 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStructs (no allocation) with attached
+NamedShardings — the dry-run lowers directly from these; train.py feeds
+real arrays with the same shardings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeCell, get_arch
+from repro.distributed import sharding as shd
+from repro.models import build_model
+from repro.models.api import Model
+from repro.optim import OptConfig, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# step functions (pure; jit them with the shardings from input_specs)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig,
+                    compression: str | None = None,
+                    grad_accum: int = 1):
+    """grad_accum > 1 runs the batch as microbatches through a scanned
+    forward/backward, averaging gradients before the (single) optimizer
+    update — the standard large-global-batch lever when activations
+    don't fit, at the cost of grad_accum x weight gathers."""
+    from repro.distributed.compression import apply_compression
+
+    def _loss_and_grads(params, batch):
+        if grad_accum == 1:
+            return jax.value_and_grad(model.loss_fn)(params, batch)
+        micro = jax.tree.map(
+            lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                *x.shape[1:]),
+            batch,
+        )
+
+        def body(acc, mb):
+            loss_acc, g_acc = acc
+            loss, g = jax.value_and_grad(model.loss_fn)(params, mb)
+            return (loss_acc + loss,
+                    jax.tree.map(jnp.add, g_acc, g)), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (loss_sum, g_sum), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), zeros), micro
+        )
+        scale = 1.0 / grad_accum
+        return loss_sum * scale, jax.tree.map(lambda g: g * scale, g_sum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = _loss_and_grads(params, batch)
+        if compression in ("bf16", "int8"):
+            err = opt_state.get("err")
+            grads, err = apply_compression(grads, err, compression)
+            opt_state = dict(opt_state)
+            if err is not None:
+                opt_state["err"] = err
+        new_params, new_opt, metrics = adamw_update(
+            grads, opt_state, params, opt_cfg
+        )
+        if compression == "int8":
+            new_opt["err"] = opt_state["err"]
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        kwargs = {}
+        if cfg.frontend == "vision":
+            kwargs["frontend_embeds"] = batch["frontend"]
+        if cfg.encoder_layers:
+            kwargs["encoder_out"] = model.encode(params, batch["frontend"])
+        return model.prefill(params, cfg, batch["tokens"], max_len, **kwargs)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    cfg = model.cfg
+
+    def decode_step(params, cache, token, pos):
+        return model.decode_step(params, cfg, token, cache, pos)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract specs
+# ---------------------------------------------------------------------------
+
+
+def choose_policy(cfg, cell: ShapeCell) -> str:
+    """Distribution policy per (arch, step kind) — §Perf iter 5.
+
+    Small dense/hybrid/ssm archs train fastest as pure FSDP/DP (the
+    'model' axis becomes extra data parallelism: zero TP gathers, grads
+    + param gathers are the only collectives). Large (>=8B) and MoE
+    archs keep TP/SP/EP over 'model'. Serving always uses tp_sp: the
+    decode KV cache and prefill activations shard the sequence over
+    'model'.
+    """
+    if cell.kind == "prefill":
+        # forward-only: replicate weights when bf16 fits comfortably
+        # (<= 8 GB), killing all weight-shard collectives (§Perf iter 6)
+        if cfg.moe is None and cfg.param_count() * 2 <= 8e9:
+            return "sp_rep"
+        return "tp_sp"
+    if cell.kind != "train":
+        return "tp_sp"
+    if cfg.moe is not None:
+        return "tp_sp"  # EP over 'model'
+    if cell.global_batch % 2:  # cannot widen batch sharding
+        return "tp_sp"
+    return "fsdp"  # dense train: ZeRO-3 beats TP up to 33B here (§Perf)
+
+
+def _sds(shape, dtype, mesh, spec):
+    spec = shd.fit_spec(spec, shape, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def abstract_params(model: Model, mesh: Mesh, policy: str = "tp_sp"):
+    sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = shd.param_specs(sds, mesh, policy)
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, p)
+        ),
+        sds, specs,
+    ), specs
+
+
+def abstract_opt_state(params_sds, mesh: Mesh):
+    def like(p):
+        return jax.ShapeDtypeStruct(p.shape, p.dtype, sharding=p.sharding)
+
+    return {
+        "mu": jax.tree.map(like, params_sds),
+        "nu": jax.tree.map(like, params_sds),
+        "step": _sds((), jnp.int32, mesh, P()),
+    }
+
+
+def batch_sds(cfg, cell: ShapeCell, mesh: Mesh, *, kind: str,
+              policy: str = "tp_sp"):
+    """Training / prefill batch ShapeDtypeStructs for one cell."""
+    ba = shd.batch_axes(mesh)
+    if policy == "fsdp":
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for cand in (ba + ("model",), ba):
+            n = 1
+            for a in cand:
+                n *= sizes.get(a, 1)
+            if cell.global_batch % n == 0:
+                ba = cand
+                break
+    b = cell.global_batch
+    s = cell.seq_len
+    out: dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        # frontend tokens count toward the assigned sequence length
+        s_txt = s - cfg.num_frontend_tokens
+        out["tokens"] = _sds((b, s_txt), jnp.int32, mesh, P(ba))
+        out["frontend"] = _sds((b, cfg.num_frontend_tokens, cfg.d_model),
+                               jnp.float32, mesh, P(ba, None, None))
+        if kind == "train":
+            out["labels"] = _sds((b, s_txt), jnp.int32, mesh, P(ba))
+    elif cfg.frontend == "audio":
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, P(ba))
+        out["frontend"] = _sds((b, cfg.num_frontend_tokens, cfg.d_model),
+                               jnp.float32, mesh, P(ba, None, None))
+        if kind == "train":
+            out["labels"] = _sds((b, s), jnp.int32, mesh, P(ba))
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, P(ba))
+        if kind == "train":
+            out["labels"] = _sds((b, s), jnp.int32, mesh, P(ba))
+    return out
+
+
+def abstract_cache(model: Model, cell: ShapeCell, mesh: Mesh):
+    cfg = model.cfg
+    mem_len = cfg.num_frontend_tokens if cfg.encoder_layers else 0
+    cache_sds = jax.eval_shape(
+        lambda: model.make_cache(cell.global_batch, cell.seq_len,
+                                 mem_len=mem_len)
+    )
+    specs = shd.cache_specs(cache_sds, mesh)
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, p)
+        ),
+        cache_sds, specs,
+    )
+
+
+def cell_lowering_inputs(arch_id: str, cell: ShapeCell, mesh: Mesh,
+                         opt_cfg: OptConfig | None = None):
+    """Returns (step_fn, args_sds_tuple, donate, policy) for a cell."""
+    cfg = get_arch(arch_id)
+    model = build_model(cfg)
+    policy = choose_policy(cfg, cell)
+    params_sds, _ = abstract_params(model, mesh, policy)
+
+    if cell.kind == "train":
+        step = make_train_step(model, opt_cfg or OptConfig())
+        opt_sds = abstract_opt_state(params_sds, mesh)
+        batch = batch_sds(cfg, cell, mesh, kind="train", policy=policy)
+        return step, (params_sds, opt_sds, batch), (0, 1), policy
+    if cell.kind == "prefill":
+        step = make_prefill_step(model, max_len=cell.seq_len)
+        batch = batch_sds(cfg, cell, mesh, kind="prefill", policy=policy)
+        return step, (params_sds, batch), (), policy
+    assert cell.kind == "decode"
+    step = make_decode_step(model)
+    cache = abstract_cache(model, cell, mesh)
+    ba = shd.batch_axes(mesh)
+    token = _sds((cell.global_batch, 1), jnp.int32, mesh, P(ba))
+    pos = _sds((), jnp.int32, mesh, P())
+    return step, (params_sds, cache, token, pos), (1,), policy

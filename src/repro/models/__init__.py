@@ -1,0 +1,4 @@
+from repro.models.api import Model, build_model
+from repro.models.common import ArchConfig, MoEConfig, SSMConfig
+
+__all__ = ["Model", "build_model", "ArchConfig", "MoEConfig", "SSMConfig"]

@@ -1,0 +1,69 @@
+"""Public model API: build_model(cfg) -> Model with pure functions."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.common import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]       # full-sequence -> (logits, aux)
+    prefill: Callable[..., Any]       # -> (last_logits, cache)
+    decode_step: Callable[..., Any]   # -> (logits, cache)
+    make_cache: Callable[..., Any]
+    encode: Callable[..., Any] | None = None
+
+    def loss_fn(self, params, batch):
+        """Next-token CE + MoE aux. batch: {tokens, labels[, frontend]}."""
+        cfg = self.cfg
+        # §Perf iter 2b: cast params to the compute dtype ONCE up front, so
+        # any gather/copy XLA hoists out of the layer scan moves bf16, not
+        # fp32 (halves hoisted-buffer memory and weight-gather bytes).
+        params = jax.tree.map(
+            lambda p: p.astype(cfg.compute_dtype)
+            if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+            params,
+        )
+        kwargs = {}
+        if cfg.frontend == "vision":
+            kwargs["frontend_embeds"] = batch["frontend"]
+        if cfg.encoder_layers:
+            kwargs["encoder_out"] = tfm.encode(params, batch["frontend"], cfg)
+        logits, aux = self.forward(params, batch["tokens"], cfg, **kwargs)
+        labels = batch["labels"]
+        if cfg.frontend == "vision":
+            logits = logits[:, -labels.shape[1]:]  # text positions only
+        logits = logits.astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        if self.cfg.moe is not None:
+            ce = ce + self.cfg.moe.aux_loss_weight * aux / max(
+                1, self.cfg.num_layers
+            )
+        return ce
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda rng: tfm.init(rng, cfg),
+        forward=tfm.forward,
+        prefill=tfm.prefill,
+        decode_step=tfm.decode_step,
+        make_cache=lambda batch, max_len, mem_len=0: tfm.make_cache(
+            cfg, batch, max_len, mem_len=mem_len
+        ),
+        encode=(lambda p, frames: tfm.encode(p, frames, cfg))
+        if cfg.encoder_layers else None,
+    )

@@ -1,0 +1,167 @@
+"""Attention implementations used inside the models.
+
+Three backends, selected by ``ArchConfig.attn_impl``:
+
+* ``xla``      — the MAS dataflow expressed at XLA level: Q is cut into
+  row chunks; per chunk the FULL score row is materialized (row-granularity
+  softmax, Alg. 3) and the two MatMuls sandwich it. This is what the
+  multi-pod dry-run lowers: it partitions cleanly under SPMD, its peak
+  memory is bounded by the chunk (the (blk_q, N) row buffer), and the
+  compute overlap the paper gets from MAC/VEC co-issue is delivered by the
+  TPU core's MXU/VPU co-scheduling within the fused loop body.
+* ``xla_full`` — naive O(N^2)-resident attention (tiny tests only).
+* ``pallas``   — the Pallas kernels from repro.kernels (per-shard path;
+  interpret mode on CPU).
+
+All functions take q: (B, Hq, Nq, E), k/v: (B, Hkv, Nkv, E).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels import ops as kops
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(x, n_rep):
+    if n_rep == 1:
+        return x
+    b, h, n, e = x.shape
+    return jnp.broadcast_to(
+        x[:, :, None], (b, h, n_rep, n, e)
+    ).reshape(b, h * n_rep, n, e)
+
+
+def xla_full_attention(q, k, v, *, causal, window=None, q_offset=0):
+    return kref.attention(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset)
+
+
+def xla_chunked_attention(q, k, v, *, causal, window=None, q_offset=0,
+                          chunk=1024, remat=True):
+    """MAS-dataflow attention in pure XLA (see module docstring)."""
+    from repro.distributed import ctx
+
+    b, hq, nq, e = q.shape
+    _, hkv, nkv, _ = k.shape
+    # Q-row-block stream parallelism (§Perf iter 1): each model shard owns
+    # a contiguous run of Q row blocks. K/V stay seq-sharded: XLA then
+    # runs the PV contraction distributed with partial-sum combines —
+    # same wire bytes as gathering K/V, but no replicated compute
+    # (§Perf iter 7, refuted: forcing the gather replicated the whole
+    # chunk loop on every shard).
+    q = ctx.seq_sharded_heads(q)
+    k = ctx.seq_sharded_heads(k)
+    v = ctx.seq_sharded_heads(v)
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    scale = e**-0.5
+    chunk = min(chunk, nq)
+    # §Perf iter 3: a Q chunk must not straddle sequence shards, or the
+    # per-chunk dynamic-slice turns into an all-gather of fp32 scores.
+    msize = (ctx._axes() or {}).get("model", 1)
+    if nq % msize == 0 and nq // msize >= 1:
+        chunk = min(chunk, max(1, nq // msize))
+    if nq % chunk != 0:  # pad rows; sliced off at the end
+        pad = (-nq) % chunk
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = q.shape[2] // chunk
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def one_chunk(i):
+        qc = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=2)
+        # Alg. 2: full score row for this Q block
+        s = jnp.einsum("bhqe,bhke->bhqk", qc.astype(jnp.float32), kf) * scale
+        if causal or window is not None:
+            rows = i * chunk + jnp.arange(chunk)[:, None] + q_offset
+            cols = jnp.arange(nkv)[None, :]
+            m = cols <= rows
+            if window is not None:
+                m = m & (cols > rows - window)
+            s = jnp.where(m[None, None], s, NEG_INF)
+        # Alg. 3: row-granularity softmax (full row, no online rescale)
+        p = jax.nn.softmax(s, axis=-1)
+        # Alg. 4: PV
+        return jnp.einsum("bhqk,bhke->bhqe", p, vf).astype(q.dtype)
+
+    f = jax.checkpoint(one_chunk) if remat else one_chunk
+    out = jax.lax.map(f, jnp.arange(n_chunks))        # (C, B, H, chunk, E)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, hq, n_chunks * chunk, e)
+    return out[:, :, :nq]
+
+
+def pallas_attention(q, k, v, *, causal, window=None, q_offset=0):
+    if q_offset:
+        raise NotImplementedError("pallas path uses decode kernel for offsets")
+    return kops.attention(q, k, v, causal=causal, window=window)
+
+
+def attention(q, k, v, *, impl="xla", causal=True, window=None, q_offset=0,
+              chunk=1024, remat=True):
+    if impl == "xla":
+        return xla_chunked_attention(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset, chunk=chunk,
+                                     remat=remat)
+    if impl == "xla_full":
+        return xla_full_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset)
+    if impl == "pallas":
+        return pallas_attention(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset)
+    raise ValueError(f"unknown attn impl {impl!r}")
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, impl="xla"):
+    """q: (B, Hq, E) against caches (B, Hkv, S, E), masked at kv_len."""
+    if impl == "pallas":
+        return kops.decode_attention(q, k_cache, v_cache, kv_len)
+    return sharded_decode_attention(q, k_cache, v_cache, kv_len)
+
+
+def sharded_decode_attention(q, k_cache, v_cache, kv_len):
+    """Distributed flash-decode (§Perf iter 2a).
+
+    The cache is sequence-sharded over 'model'; instead of letting XLA
+    all-gather K/V (the baseline's dominant collective), scores are
+    constrained to stay sharded over the cache's S axis, so the softmax
+    max/sum and the PV contraction reduce over the model axis with
+    (B, H, E)-sized all-reduces — the split-K combine of the decode
+    kernel, executed across chips.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import ctx
+
+    b, hq, e = q.shape
+    _, hkv, s, _ = k_cache.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, e)  # grouped: no kv repeat, no resharding
+
+    def seq_spec(axes):
+        return P(ctx.batch_axes(), None,
+                 "model" if "model" in axes else None, None)
+
+    k = ctx.constrain(k_cache, seq_spec)
+    v = ctx.constrain(v_cache, seq_spec)
+    scale = e**-0.5
+    sc = jnp.einsum("bkge,bkse->bkgs", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    sc = ctx.constrain(
+        sc, lambda axes: P(ctx.batch_axes(), None, None,
+                           "model" if "model" in axes else None)
+    )
+    mask = jnp.arange(s)[None, None, None, :] < kv_len
+    sc = jnp.where(mask, sc, NEG_INF)
+    # max/sum reduce over the sharded S axis -> (B, Hkv, G) all-reduces
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bkse->bkge", p, v.astype(jnp.float32))
+    return (o / l).reshape(b, hq, e).astype(q.dtype)

@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * sigmoid(r_t)),  c = 8
+
+Train/prefill uses an associative affine scan over the sequence; decode
+is a single-step recurrence on the carried state. Attention-free, so the
+paper's MAC/VEC co-scheduling has nothing to pair here (DESIGN.md §4) —
+hybrid archs apply MAS only on their local-attention layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, dense_init, rms_norm, split_keys
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ArchConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = split_keys(key, ["x", "gate", "conv", "wi", "wr", "out", "lam"])
+    return {
+        "norm": jnp.zeros((d,), cfg.param_dtype),
+        "w_x": dense_init(ks["x"], (d, w), dtype=cfg.param_dtype),
+        "w_gate": dense_init(ks["gate"], (d, w), dtype=cfg.param_dtype),
+        "conv_w": dense_init(ks["conv"], (4, w), dtype=cfg.param_dtype),
+        "w_i": dense_init(ks["wi"], (w, w), dtype=cfg.param_dtype),
+        "w_r": dense_init(ks["wr"], (w, w), dtype=cfg.param_dtype),
+        # softplus^-1 spread so a^c spans (0.9, 0.999) as in Griffin
+        "lam": jnp.linspace(0.3, 1.5, w).astype(cfg.param_dtype),
+        "w_out": dense_init(ks["out"], (w, d), dtype=cfg.param_dtype),
+    }
+
+
+def _affine_scan(a, b):
+    """h_t = a_t * h_{t-1} + b_t over axis 1. a, b: (B, L, W) fp32."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return bb
+
+
+def rglru_block(params, x, cfg: ArchConfig, *, conv_state=None,
+                rnn_state=None, streaming=False):
+    """x: (B, L, D) -> (y, (conv_state, rnn_state))."""
+    dt = x.dtype
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ params["w_gate"].astype(dt))
+    xb = h @ params["w_x"].astype(dt)
+
+    k = params["conv_w"].shape[0]
+    if conv_state is None and streaming:
+        conv_state = jnp.zeros((x.shape[0], k - 1, xb.shape[-1]), dt)
+    if streaming or conv_state is not None:
+        pad = (jnp.zeros((x.shape[0], k - 1, xb.shape[-1]), dt)
+               if conv_state is None else conv_state.astype(dt))
+        xp = jnp.concatenate([pad, xb], axis=1)
+    else:
+        xp = jnp.concatenate(
+            [jnp.zeros((x.shape[0], k - 1, xb.shape[-1]), dt), xb], axis=1
+        )
+    conv = sum(xp[:, i:i + xb.shape[1]] * params["conv_w"][i].astype(dt)
+               for i in range(k))
+    new_conv = xp[:, -(k - 1):]
+
+    r = jax.nn.sigmoid(conv @ params["w_r"].astype(dt)).astype(jnp.float32)
+    i = jax.nn.sigmoid(conv @ params["w_i"].astype(dt)).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                                    # (B, L, W)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * conv.astype(jnp.float32)
+    )
+
+    if streaming:
+        assert x.shape[1] == 1
+        s0 = (jnp.zeros_like(gated_in[:, 0]) if rnn_state is None
+              else rnn_state.astype(jnp.float32))
+        hseq = (a[:, 0] * s0 + gated_in[:, 0])[:, None]
+        new_state = hseq[:, 0]
+    else:
+        if rnn_state is not None:
+            # fold carried state into the first step
+            gated_in = gated_in.at[:, 0].add(
+                a[:, 0] * rnn_state.astype(jnp.float32)
+            )
+        hseq = _affine_scan(a, gated_in)
+        new_state = hseq[:, -1]
+
+    y = (hseq.astype(dt) * gate) @ params["w_out"].astype(dt)
+    return y.astype(x.dtype), (new_conv, new_state)

@@ -1,0 +1,190 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked, attention-free.
+
+The chunked SSD computation has the same two-stream shape as
+MAS-Attention (DESIGN.md §4): intra-chunk quadratic terms are MXU
+matmuls, inter-chunk recurrences and gating are VPU elementwise work —
+but there is no softmax stream, so the paper's technique is recorded as
+inapplicable for this family; the layer is implemented on its own merits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, dense_init, rms_norm, split_keys
+
+
+def _segsum(a):
+    """a: (..., q) -> (..., q, q) lower-triangular segment sums:
+    out[i, j] = sum_{j < k <= i} a[k] for i >= j, else -inf."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, bmat, cmat, chunk: int, initial_state=None):
+    """SSD scan.
+
+    x: (B, L, H, P) inputs (already dt-scaled)
+    a: (B, L, H) log-decay per step (negative; already dt-scaled)
+    bmat, cmat: (B, L, H, N) input/output projections (group-expanded)
+    Returns y: (B, L, H, P), final_state: (B, H, P, N).
+    """
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    def r(t):  # (B, L, ...) -> (B, nc, chunk, ...)
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    xc, ac, bc, cc = r(x), r(a), r(bmat), r(cmat)
+    ac = ac.astype(jnp.float32)
+    a_cum = jnp.cumsum(ac, axis=2)                       # (b,nc,q,h)
+
+    # intra-chunk (quadratic, MXU): Y_diag = (C B^T * L) x
+    lmat = jnp.exp(_segsum(jnp.moveaxis(ac, -1, 2)))     # (b,nc,h,q,q)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs",
+                        cc.astype(jnp.float32), bc.astype(jnp.float32))
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp", scores * lmat,
+                        xc.astype(jnp.float32))
+
+    # chunk states (B^T x with right decay)
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (b,nc,q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                        bc.astype(jnp.float32), decay_states,
+                        xc.astype(jnp.float32))          # (b,nc,h,p,n)
+
+    # inter-chunk recurrence (sequential over nc chunks)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])            # (b,nc,h)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, inp):
+        dec, st = inp                                    # (b,h), (b,h,p,n)
+        s_new = s * dec[..., None, None] + st
+        return s_new, s
+
+    final, state_in = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    state_in = jnp.moveaxis(state_in, 0, 1)              # (b,nc,h,p,n)
+
+    # inter-chunk contribution: C state_in with left decay
+    decay_in = jnp.exp(a_cum)                            # (b,nc,q,h)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       cc.astype(jnp.float32), state_in, decay_in)
+
+    y = (y_diag + y_off).reshape(b, l, h, p).astype(x.dtype)
+    return y, final.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# full mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def init_ssd_block(key, cfg: ArchConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.head_dim
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    ks = split_keys(key, ["in", "conv", "out", "dt", "A", "norm"])
+    return {
+        "norm": jnp.zeros((d,), cfg.param_dtype),
+        "w_in": dense_init(
+            ks["in"], (d, 2 * di + 2 * s.n_groups * s.d_state + nh),
+            dtype=cfg.param_dtype,
+        ),
+        "conv_w": dense_init(ks["conv"], (s.conv_width, conv_ch),
+                             dtype=cfg.param_dtype),
+        "dt_bias": jnp.zeros((nh,), cfg.param_dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh).astype(cfg.param_dtype)
+        ),
+        "d_skip": jnp.ones((nh,), cfg.param_dtype),
+        "gate_norm": jnp.zeros((di,), cfg.param_dtype),
+        "w_out": dense_init(ks["out"], (di, d), dtype=cfg.param_dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B, L, C), w: (K, C). If ``state``
+    ((B, K-1, C)) is given, performs a streaming step (L may be 1) and
+    returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return y, new_state
+
+
+def ssd_block(params, x, cfg: ArchConfig, *, conv_state=None, ssm_state=None,
+              streaming=False):
+    """x: (B, L, D) -> (y, (conv_state, ssm_state))."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.head_dim
+    gn = s.n_groups * s.d_state
+    dt_comp = x.dtype
+
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    proj = h @ params["w_in"].astype(dt_comp)
+    z, xin, bc, dt = jnp.split(proj, [di, 2 * di, 2 * di + 2 * gn], axis=-1)
+
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out, new_conv = _causal_conv(
+        conv_in, params["conv_w"].astype(dt_comp), conv_state
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + gn], axis=-1)
+
+    b_, l, _ = x.shape
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                     # (B, L, H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))     # (H,)
+    xh = xin.reshape(b_, l, nh, s.head_dim)
+    heads_per_group = nh // s.n_groups
+    bmat = jnp.repeat(
+        bmat.reshape(b_, l, s.n_groups, s.d_state), heads_per_group, axis=2
+    )
+    cmat = jnp.repeat(
+        cmat.reshape(b_, l, s.n_groups, s.d_state), heads_per_group, axis=2
+    )
+
+    if streaming:
+        # single-step recurrence: state = state * exp(dt a) + dt B x
+        assert l == 1
+        dt0 = dt[:, 0]                                    # (B, H)
+        decay = jnp.exp(dt0 * a)                          # (B, H)
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dt0, bmat[:, 0],
+                         xh[:, 0].astype(jnp.float32))
+        state = (jnp.zeros_like(upd) if ssm_state is None else
+                 ssm_state.astype(jnp.float32))
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", cmat[:, 0].astype(jnp.float32),
+                       state)[:, None]                    # (B,1,H,P)
+        y = y.reshape(b_, 1, nh, s.head_dim)
+        new_state = state
+    else:
+        xs = (xh.astype(jnp.float32) * dt[..., None]).astype(dt_comp)
+        y, new_state = ssd_chunked(
+            xs, dt * a, bmat, cmat, min(s.chunk, l), initial_state=ssm_state
+        )
+
+    y = y + xh.astype(y.dtype) * params["d_skip"].astype(y.dtype)[:, None]
+    y = y.reshape(b_, l, di)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = y @ params["w_out"].astype(dt_comp)
+    return out.astype(x.dtype), (new_conv, new_state)

@@ -1,0 +1,594 @@
+"""The composable LM: dense / GQA / MoE / hybrid / SSM / enc-dec stacks.
+
+Layers are organized as ``num_units`` repetitions of a ``unit_pattern``
+(e.g. ("rec","rec","attn") for RecurrentGemma) plus a short tail, so the
+whole decoder lowers as ONE ``lax.scan`` over stacked unit parameters —
+compile time stays flat in depth, which the 512-device dry-run depends on.
+
+Pure functional: ``init(rng, cfg) -> params`` and explicit forward
+functions. Caches are pytrees with the same unit structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.common import (
+    ArchConfig,
+    apply_rope,
+    dense_init,
+    rms_norm,
+    sinusoidal_positions,
+    split_keys,
+)
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.rglru import init_rglru_block, rglru_block
+from repro.models.ssm import init_ssd_block, ssd_block
+
+
+# ---------------------------------------------------------------------------
+# pattern bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def unit_layout(cfg: ArchConfig) -> tuple[tuple[str, ...], int, tuple[str, ...]]:
+    """(unit_pattern, num_units, tail)."""
+    if cfg.family == "ssm":
+        pattern: tuple[str, ...] = ("ssd",)
+    elif cfg.block_pattern is not None:
+        pattern = cfg.block_pattern
+    else:
+        pattern = ("attn",)
+    tail = cfg.pattern_tail
+    body = cfg.num_layers - len(tail)
+    assert body % len(pattern) == 0, (cfg.name, body, pattern)
+    return pattern, body // len(pattern), tail
+
+
+# ---------------------------------------------------------------------------
+# block init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg: ArchConfig, cross: bool = False):
+    d, e = cfg.d_model, cfg.hd
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = split_keys(key, ["q", "k", "v", "o"])
+    p = {
+        "norm": jnp.zeros((d,), cfg.param_dtype),
+        "wq": dense_init(ks["q"], (d, hq * e), dtype=cfg.param_dtype),
+        "wk": dense_init(ks["k"], (d, hkv * e), dtype=cfg.param_dtype),
+        "wv": dense_init(ks["v"], (d, hkv * e), dtype=cfg.param_dtype),
+        "wo": dense_init(ks["o"], (hq * e, d), dtype=cfg.param_dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((e,), cfg.param_dtype)
+        p["k_norm"] = jnp.zeros((e,), cfg.param_dtype)
+    return p
+
+
+def init_mlp(key, cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, ["gate", "up", "down"])
+    p = {
+        "norm": jnp.zeros((d,), cfg.param_dtype),
+        "w_up": dense_init(ks["up"], (d, f), dtype=cfg.param_dtype),
+        "w_down": dense_init(ks["down"], (f, d), dtype=cfg.param_dtype),
+    }
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = dense_init(ks["gate"], (d, f), dtype=cfg.param_dtype)
+    return p
+
+
+def mlp(params, x, cfg: ArchConfig):
+    from repro.distributed import ctx
+
+    dt = x.dtype
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    up = h @ params["w_up"].astype(dt)
+    if cfg.mlp == "swiglu":
+        up = up * jax.nn.silu(h @ params["w_gate"].astype(dt))
+    else:
+        up = jax.nn.gelu(up)
+    # §Perf iter 4: keep the (B, S, F) intermediate sequence-sharded so
+    # XLA gathers the (smaller) weights instead of the activations and
+    # the down-projection needs no cross-shard reduction.
+    up = ctx.seq_sharded_activations(up)
+    return up @ params["w_down"].astype(dt)
+
+
+def _split_heads(x, n_heads, e):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, e).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, e = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * e)
+
+
+def _qkv(params, x, cfg, positions, *, rope=True):
+    dt = x.dtype
+    e = cfg.hd
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    q = _split_heads(h @ params["wq"].astype(dt), cfg.num_heads, e)
+    k = _split_heads(h @ params["wk"].astype(dt), cfg.num_kv_heads, e)
+    v = _split_heads(h @ params["wv"].astype(dt), cfg.num_kv_heads, e)
+    if cfg.qk_norm and "q_norm" in params:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if rope and cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(params, x, cfg: ArchConfig, *, positions, window=None,
+               causal=True):
+    """Full-sequence self-attention (train / encoder / prefill-compute)."""
+    q, k, v = _qkv(params, x, cfg, positions)
+    o = attn_mod.attention(
+        q, k, v, impl=cfg.attn_impl, causal=causal, window=window,
+        chunk=cfg.attn_chunk, remat=cfg.remat,
+    )
+    return _merge_heads(o) @ params["wo"].astype(x.dtype), (k, v)
+
+
+def attn_decode(params, x, cfg: ArchConfig, *, cache_k, cache_v, pos,
+                window=None):
+    """One-token self-attention against a (ring) cache.
+
+    x: (B, 1, D); cache_[kv]: (B, Hkv, C, E); pos: scalar absolute position.
+    Returns (out, (new_k, new_v)).
+    """
+    c = cache_k.shape[2]
+    q, k, v = _qkv(params, x, cfg, positions=pos + jnp.zeros((1,), jnp.int32))
+    slot = pos % c if window is not None else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=2)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=2)
+    kv_len = jnp.minimum(pos + 1, c)
+    o = attn_mod.decode_attention(
+        q[:, :, 0], cache_k, cache_v, kv_len,
+        impl="pallas" if cfg.attn_impl == "pallas" else "xla",
+    )
+    return (o.reshape(x.shape[0], 1, -1) @ params["wo"].astype(x.dtype),
+            (cache_k, cache_v))
+
+
+def cross_attn_block(params, x, cfg: ArchConfig, *, mem_k, mem_v):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    dt = x.dtype
+    e = cfg.hd
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    q = _split_heads(h @ params["wq"].astype(dt), cfg.num_heads, e)
+    o = attn_mod.attention(q, mem_k, mem_v, impl=cfg.attn_impl, causal=False,
+                           chunk=cfg.attn_chunk, remat=cfg.remat)
+    return _merge_heads(o) @ params["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# decoder block (kind dispatch)
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, kind: str, cfg: ArchConfig, *, with_cross=False):
+    ks = split_keys(key, ["main", "ffn", "cross"])
+    if kind == "ssd":
+        return {"ssd": init_ssd_block(ks["main"], cfg)}
+    if kind == "rec":
+        return {"rec": init_rglru_block(ks["main"], cfg),
+                "ffn": init_mlp(ks["ffn"], cfg)}
+    assert kind == "attn"
+    p = {"attn": init_attn(ks["main"], cfg)}
+    if with_cross:
+        p["cross"] = init_attn(ks["cross"], cfg, cross=True)
+    if cfg.moe is not None:
+        p["ffn"] = init_moe(ks["ffn"], cfg)
+    else:
+        p["ffn"] = init_mlp(ks["ffn"], cfg)
+    return p
+
+
+def make_cache_block(kind: str, cfg: ArchConfig, batch: int, max_len: int,
+                     dtype, *, with_cross=False, mem_len: int = 0):
+    """Zero-initialized cache pytree for one block."""
+    e = cfg.hd
+    if kind == "attn":
+        c = min(max_len, cfg.window) if cfg.window else max_len
+        blk: dict[str, Any] = {
+            "k": jnp.zeros((batch, cfg.num_kv_heads, c, e), dtype),
+            "v": jnp.zeros((batch, cfg.num_kv_heads, c, e), dtype),
+        }
+        if with_cross:
+            blk["mem_k"] = jnp.zeros((batch, cfg.num_kv_heads, mem_len, e),
+                                     dtype)
+            blk["mem_v"] = jnp.zeros((batch, cfg.num_kv_heads, mem_len, e),
+                                     dtype)
+        return blk
+    if kind == "rec":
+        w = cfg.lru_width or cfg.d_model
+        return {"conv": jnp.zeros((batch, 3, w), dtype),
+                "rnn": jnp.zeros((batch, w), jnp.float32)}
+    assert kind == "ssd"
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def apply_block_train(params, kind, x, cfg: ArchConfig, positions):
+    """Full-sequence forward. Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if kind == "ssd":
+        y, _ = ssd_block(params["ssd"], x, cfg)
+        return x + y, aux
+    if kind == "rec":
+        y, _ = rglru_block(params["rec"], x, cfg)
+        x = x + y
+        return x + mlp(params["ffn"], x, cfg), aux
+    window = cfg.window if cfg.block_pattern is not None else None
+    y, _ = attn_block(params["attn"], x, cfg, positions=positions,
+                      window=window, causal=cfg.causal)
+    x = x + y
+    if "cross" in params:
+        raise ValueError("cross-attn blocks go through apply_block_decoder")
+    if cfg.moe is not None:
+        y, aux = moe_ffn(params["ffn"], x, cfg)
+    else:
+        y = mlp(params["ffn"], x, cfg)
+    return x + y, aux
+
+
+def apply_block_decode(params, kind, x, cfg: ArchConfig, cache, pos):
+    """One-token step. Returns (x, new_cache_block)."""
+    if kind == "ssd":
+        y, (conv, state) = ssd_block(
+            params["ssd"], x, cfg, conv_state=cache["conv"],
+            ssm_state=cache["state"], streaming=True,
+        )
+        return x + y, {"conv": conv, "state": state}
+    if kind == "rec":
+        y, (conv, rnn) = rglru_block(
+            params["rec"], x, cfg, conv_state=cache["conv"],
+            rnn_state=cache["rnn"], streaming=True,
+        )
+        x = x + y
+        return x + mlp(params["ffn"], x, cfg), {"conv": conv, "rnn": rnn}
+    window = cfg.window if cfg.block_pattern is not None else None
+    y, (k, v) = attn_decode(params["attn"], x, cfg, cache_k=cache["k"],
+                            cache_v=cache["v"], pos=pos, window=window)
+    x = x + y
+    new_cache = dict(cache, k=k, v=v)
+    if "cross" in params:
+        x = x + cross_attn_block(params["cross"], x, cfg,
+                                 mem_k=cache["mem_k"], mem_v=cache["mem_v"])
+    if cfg.moe is not None:
+        y, _ = moe_ffn(params["ffn"], x, cfg)
+    else:
+        y = mlp(params["ffn"], x, cfg)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init(rng, cfg: ArchConfig):
+    pattern, num_units, tail = unit_layout(cfg)
+    ks = split_keys(
+        rng, ["embed", "units", "tail", "enc", "cross", "unembed"]
+    )
+    params: dict[str, Any] = {
+        "embed": dense_init(ks["embed"], (cfg.vocab_size, cfg.d_model),
+                            in_axis=1, dtype=cfg.param_dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(
+            ks["unembed"], (cfg.d_model, cfg.vocab_size),
+            dtype=cfg.param_dtype,
+        )
+    with_cross = cfg.encoder_layers > 0
+
+    def init_unit(key):
+        sub = jax.random.split(key, len(pattern))
+        return {f"b{j}": init_block(sub[j], kind, cfg, with_cross=with_cross
+                                    and kind == "attn")
+                for j, kind in enumerate(pattern)}
+
+    unit_keys = jax.random.split(ks["units"], num_units)
+    params["units"] = jax.vmap(init_unit)(unit_keys)
+    if tail:
+        tkeys = jax.random.split(ks["tail"], len(tail))
+        params["tail"] = {
+            f"t{j}": init_block(tkeys[j], kind, cfg, with_cross=with_cross
+                                and kind == "attn")
+            for j, kind in enumerate(tail)
+        }
+    if cfg.encoder_layers:
+        ekeys = jax.random.split(ks["enc"], cfg.encoder_layers)
+
+        def init_enc(key):
+            s = split_keys(key, ["attn", "ffn"])
+            return {"attn": init_attn(s["attn"], cfg),
+                    "ffn": init_mlp(s["ffn"], cfg)}
+
+        params["encoder"] = jax.vmap(init_enc)(ekeys)
+        params["enc_final_norm"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+    return params
+
+
+def _embed(params, tokens, cfg, frontend_embeds=None, positions=None):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    if frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    if not cfg.rope:
+        if positions is None:
+            positions = jnp.arange(x.shape[1])
+        pos = sinusoidal_positions(positions, cfg.d_model)
+        x = x + pos[None].astype(x.dtype)
+    return x
+
+
+def _unembed(params, x, cfg):
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(h.dtype)
+        return jnp.einsum("bsd,vd->bsv", h, w)
+    return h @ params["unembed"].astype(h.dtype)
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """Encoder stack over precomputed frontend frames (B, F, D)."""
+    x = frames.astype(cfg.compute_dtype)
+    if not cfg.rope:
+        x = x + sinusoidal_positions(
+            jnp.arange(x.shape[1]), cfg.d_model
+        )[None].astype(x.dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, p):
+        y, _ = attn_block(p["attn"], x, cfg, positions=positions,
+                          causal=False)
+        x = x + y
+        return x + mlp(p["ffn"], x, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def forward(params, tokens, cfg: ArchConfig, *, frontend_embeds=None,
+            encoder_out=None):
+    """Training/prefill-style full-sequence forward -> (logits, aux_loss).
+
+    ``frontend_embeds``: (B, F, D) stub embeddings prepended to the token
+    embeddings (VLM). ``encoder_out``: (B, F, D) encoder memory (enc-dec).
+    """
+    from repro.distributed import ctx
+
+    pattern, num_units, tail = unit_layout(cfg)
+    x = _embed(params, tokens, cfg, frontend_embeds)
+    x = ctx.seq_sharded_activations(x)  # SP between blocks (§Perf iter 1)
+    positions = jnp.arange(x.shape[1])
+    aux_total = jnp.float32(0.0)
+
+    mem_kv = None
+    if encoder_out is not None:
+        mem_kv = encoder_out  # projected per block below
+
+    def unit_body(carry, p_unit):
+        x, aux = carry
+        for j, kind in enumerate(pattern):
+            p = p_unit[f"b{j}"]
+            if "cross" in p:
+                y, a = _block_with_cross(p, x, cfg, positions, mem_kv)
+            else:
+                y, a = apply_block_train(p, kind, x, cfg, positions)
+            x, aux = y, aux + a
+        return (x, aux), None
+
+    o = cfg.outer_scan
+    if cfg.remat and o and num_units % o == 0 and num_units // o > 1:
+        # §Perf iter 9: two-level scan — checkpoint at the OUTER level so
+        # only `o` carries persist; the inner run of units/o layers is
+        # recomputed per outer step in the backward.
+        inner = num_units // o
+        units2 = jax.tree.map(
+            lambda t: t.reshape(o, inner, *t.shape[1:]), params["units"]
+        )
+
+        def outer_body(carry, p_outer):
+            carry, _ = jax.lax.scan(unit_body, carry, p_outer)
+            return carry, None
+
+        outer_body = jax.checkpoint(
+            outer_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        (x, aux_total), _ = jax.lax.scan(outer_body, (x, aux_total), units2)
+    else:
+        if cfg.remat:
+            unit_body = jax.checkpoint(
+                unit_body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        (x, aux_total), _ = jax.lax.scan(unit_body, (x, aux_total),
+                                         params["units"])
+    for j, kind in enumerate(tail):
+        x, a = apply_block_train(params["tail"][f"t{j}"], kind, x, cfg,
+                                 positions)
+        aux_total = aux_total + a
+    return _unembed(params, x, cfg), aux_total
+
+
+def _block_with_cross(p, x, cfg, positions, mem):
+    y, _ = attn_block(p["attn"], x, cfg, positions=positions,
+                      causal=cfg.causal)
+    x = x + y
+    dt = x.dtype
+    e = cfg.hd
+    hm = mem.astype(dt)  # encoder output is already final-normed
+    mem_k = _split_heads(hm @ p["cross"]["wk"].astype(dt),
+                         cfg.num_kv_heads, e)
+    mem_v = _split_heads(hm @ p["cross"]["wv"].astype(dt),
+                         cfg.num_kv_heads, e)
+    x = x + cross_attn_block(p["cross"], x, cfg, mem_k=mem_k, mem_v=mem_v)
+    y = mlp(p["ffn"], x, cfg)
+    return x + y, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, *, mem_len=0):
+    pattern, num_units, tail = unit_layout(cfg)
+    with_cross = cfg.encoder_layers > 0
+
+    def one_unit(_):
+        return {
+            f"b{j}": make_cache_block(
+                kind, cfg, batch, max_len, cfg.compute_dtype,
+                with_cross=with_cross and kind == "attn", mem_len=mem_len,
+            )
+            for j, kind in enumerate(pattern)
+        }
+
+    cache: dict[str, Any] = {
+        "units": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (num_units,) + x.shape),
+            one_unit(0),
+        )
+    }
+    if tail:
+        cache["tail"] = {
+            f"t{j}": make_cache_block(
+                kind, cfg, batch, max_len, cfg.compute_dtype,
+                with_cross=with_cross and kind == "attn", mem_len=mem_len,
+            )
+            for j, kind in enumerate(tail)
+        }
+    return cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, pos):
+    """token: (B, 1) int32; pos: scalar int32 -> (logits (B, 1, V), cache)."""
+    pattern, num_units, tail = unit_layout(cfg)
+    x = _embed(params, token, cfg, positions=jnp.asarray(pos)[None])
+
+    def unit_body(x, xs):
+        p_unit, c_unit = xs
+        new_c = {}
+        for j, kind in enumerate(pattern):
+            x, new_c[f"b{j}"] = apply_block_decode(
+                p_unit[f"b{j}"], kind, x, cfg, c_unit[f"b{j}"], pos
+            )
+        return x, new_c
+
+    x, new_units = jax.lax.scan(unit_body, x,
+                                (params["units"], cache["units"]))
+    new_cache: dict[str, Any] = {"units": new_units}
+    if tail:
+        new_cache["tail"] = {}
+        for j, kind in enumerate(tail):
+            x, new_cache["tail"][f"t{j}"] = apply_block_decode(
+                params["tail"][f"t{j}"], kind, x, cfg, cache["tail"][f"t{j}"],
+                pos,
+            )
+    return _unembed(params, x, cfg), new_cache
+
+
+def prefill(params, cfg: ArchConfig, tokens, max_len, *,
+            frontend_embeds=None, encoder_out=None):
+    """Run the full prompt, build the cache -> (last_logits, cache).
+
+    Cache is populated by re-running per-block K/V projections; hidden
+    states flow through the same scanned units as training.
+    """
+    pattern, num_units, tail = unit_layout(cfg)
+    x = _embed(params, tokens, cfg, frontend_embeds)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.arange(s)
+    with_cross = cfg.encoder_layers > 0
+    mem = encoder_out
+
+    def fill_attn(p, x, cache_blk):
+        window = cfg.window if cfg.block_pattern is not None else None
+        y, (k, v) = attn_block(p["attn"], x, cfg, positions=positions,
+                               window=window, causal=cfg.causal)
+        c = cache_blk["k"].shape[2]
+        if k.shape[2] >= c:
+            # keep the last window, placed at canonical ring slots
+            # (position p lives at slot p % c) so decode writes line up
+            k, v = k[:, :, -c:], v[:, :, -c:]
+            shift = s % c
+            if shift:
+                k = jnp.roll(k, shift, axis=2)
+                v = jnp.roll(v, shift, axis=2)
+        new = dict(cache_blk)
+        new["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache_blk["k"], k, 0, axis=2
+        )
+        new["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache_blk["v"], v, 0, axis=2
+        )
+        x = x + y
+        if with_cross and "cross" in p:
+            dt = x.dtype
+            e = cfg.hd
+            hm = mem.astype(dt)
+            mem_k = _split_heads(hm @ p["cross"]["wk"].astype(dt),
+                                 cfg.num_kv_heads, e)
+            mem_v = _split_heads(hm @ p["cross"]["wv"].astype(dt),
+                                 cfg.num_kv_heads, e)
+            new["mem_k"], new["mem_v"] = mem_k, mem_v
+            x = x + cross_attn_block(p["cross"], x, cfg, mem_k=mem_k,
+                                     mem_v=mem_v)
+        if cfg.moe is not None:
+            y, _ = moe_ffn(p["ffn"], x, cfg)
+        else:
+            y = mlp(p["ffn"], x, cfg)
+        return x + y, new
+
+    def fill_block(p, kind, x, cache_blk):
+        if kind == "attn":
+            return fill_attn(p, x, cache_blk)
+        if kind == "rec":
+            y, (conv, rnn) = rglru_block(p["rec"], x, cfg)
+            x = x + y
+            return x + mlp(p["ffn"], x, cfg), {"conv": conv, "rnn": rnn}
+        y, (conv, state) = ssd_block(p["ssd"], x, cfg)
+        return x + y, {"conv": conv, "state": state}
+
+    def unit_body(x, xs):
+        p_unit, c_unit = xs
+        new_c = {}
+        for j, kind in enumerate(pattern):
+            x, new_c[f"b{j}"] = fill_block(p_unit[f"b{j}"], kind, x,
+                                           c_unit[f"b{j}"])
+        return x, new_c
+
+    cache = make_cache(cfg, b, max_len,
+                       mem_len=mem.shape[1] if mem is not None else 0)
+    x, new_units = jax.lax.scan(unit_body, x,
+                                (params["units"], cache["units"]))
+    new_cache: dict[str, Any] = {"units": new_units}
+    if tail:
+        new_cache["tail"] = {}
+        for j, kind in enumerate(tail):
+            x, new_cache["tail"][f"t{j}"] = fill_block(
+                params["tail"][f"t{j}"], kind, x, cache["tail"][f"t{j}"]
+            )
+    logits = _unembed(params, x[:, -1:], cfg)
+    return logits, new_cache

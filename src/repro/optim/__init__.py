@@ -1,0 +1,8 @@
+from repro.optim.adamw import (
+    OptConfig,
+    adamw_init,
+    adamw_update,
+    cosine_lr,
+)
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "cosine_lr"]

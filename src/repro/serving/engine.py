@@ -1,0 +1,89 @@
+"""Batched serving engine: queued requests -> batched prefill -> decode.
+
+The serving shapes of the assignment (prefill_32k / decode_32k /
+long_500k) lower these exact step functions; this engine is the host
+loop around them: it pads a wave of requests to a common prompt length,
+prefills once, then decodes greedily step-by-step, retiring sequences on
+EOS or max_new_tokens. Continuous batching at fleet scale slots new
+requests into retired cache rows (slot reuse is exercised in tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: int = 2
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, max_len: int = 512,
+                 batch_size: int = 4):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, model.cfg, t, c, pos)
+        )
+
+    def _prefill(self, tokens):
+        return self.model.prefill(self.params, self.cfg, tokens,
+                                  self.max_len)
+
+    def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
+        """Bucket by prompt length, serve each bucket as batched waves."""
+        buckets: dict[int, list[Request]] = {}
+        for r in requests:
+            buckets.setdefault(len(r.prompt), []).append(r)
+        out: dict[int, np.ndarray] = {}
+        for _, rs in sorted(buckets.items()):
+            for i in range(0, len(rs), self.batch_size):
+                out.update(self.serve_wave(rs[i:i + self.batch_size]))
+        return out
+
+    def serve_wave(self, requests: list[Request]) -> dict[int, np.ndarray]:
+        """Serve up to batch_size same-length requests as one wave."""
+        assert len(requests) <= self.batch_size
+        plens = {len(r.prompt) for r in requests}
+        assert len(plens) == 1, "serve_wave needs equal prompt lengths"
+        plen = plens.pop()
+        reqs = list(requests)
+        while len(reqs) < self.batch_size:  # pad with a dummy row
+            reqs.append(Request(rid=-1,
+                                prompt=np.ones((plen,), np.int32),
+                                max_new_tokens=0))
+        prompts = np.stack([r.prompt for r in reqs]).astype(np.int32)
+        logits, cache = self._prefill(jnp.asarray(prompts))
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        out = {r.rid: [] for r in reqs if r.rid >= 0}
+        done = np.array([r.max_new_tokens == 0 for r in reqs])
+        token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        for step in range(max_new):
+            for i, r in enumerate(reqs):
+                if r.rid >= 0 and not done[i]:
+                    t = int(token[i, 0])
+                    out[r.rid].append(t)
+                    if t == r.eos_id or len(out[r.rid]) >= r.max_new_tokens:
+                        done[i] = True
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, cache, token,
+                                         jnp.int32(plen + step))
+            token = jnp.argmax(logits[:, -1], axis=-1).astype(
+                jnp.int32
+            )[:, None]
+        return {rid: np.array(v, np.int32) for rid, v in out.items()}

@@ -1,0 +1,20 @@
+"""Event-driven cycle/energy model of the paper's edge accelerator.
+
+Reproduces the paper's evaluation substrate (Timeloop/Accelergy/TileFlow
+stack, §5.1) analytically: a 2-core device, each core with a 16x16 MAC
+mesh and a 256-lane VEC unit at 3.75 GHz, a shared 5 MB L1, and a
+30 GB/s DRAM. Schedules for all six methods of §5 are built as explicit
+tiled task graphs and run through a multi-stream list scheduler.
+"""
+
+from repro.sim.hw import EDGE_HW, HWConfig
+from repro.sim.workload import AttentionWorkload, PAPER_NETWORKS
+from repro.sim.engine import simulate, SimResult
+from repro.sim.schedules import METHODS, build_schedule, Tiling
+from repro.sim.search import search_tiling
+
+__all__ = [
+    "EDGE_HW", "HWConfig", "AttentionWorkload", "PAPER_NETWORKS",
+    "simulate", "SimResult", "METHODS", "build_schedule", "Tiling",
+    "search_tiling",
+]

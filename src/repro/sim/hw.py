@@ -1,0 +1,77 @@
+"""Hardware model of the paper's simulated edge accelerator (§5.1, Fig. 4).
+
+Two cores, each: 16x16 MAC PE mesh (256 MAC/cycle) + 256-lane VEC unit.
+3.75 GHz, 16 nm. Shared 5 MB L1 <-> 30 GB/s / 6 GB DRAM. L0 register file
+between L1 and the PEs.
+
+Energy constants are Accelergy-class per-access numbers calibrated so the
+reproduced Table 3 lands in the paper's regime (DRAM access dominates;
+PE energy is schedule-invariant — §5.3.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HWConfig:
+    name: str = "edge-sim"
+    cores: int = 2
+    mac_per_core: int = 256          # 16x16 PE mesh
+    mac_mesh: int = 16               # systolic tile edge
+    vec_lanes: int = 256
+    freq_ghz: float = 3.75
+    dram_gbps: float = 30.0
+    l1_bytes: int = 5 * 2**20
+    bytes_per_elem: int = 2          # fp16 end-to-end (paper §5.6)
+
+    # VEC microcosts (cycles per 256-wide vector op). exp dominates:
+    # range reduction + polynomial + reconstruction on 16-bit lanes.
+    vec_exp_cost: float = 48.0
+    vec_ew_cost: float = 1.0         # add/sub/mul/max
+    vec_div_cost: float = 8.0
+    vec_row_overhead: float = 32.0   # per-row reduce latency / drain
+
+    # Accelergy-class energies (pJ). Calibrated against Table 3 (see
+    # benchmarks/table3_energy.py): the Layer-Wise-minus-MAS energy gap
+    # divided by their DRAM-traffic gap pins dram_pj_per_byte ~ 1e3;
+    # the schedule-invariant remainder (§5.3.3) pins the L0/PE terms.
+    dram_pj_per_byte: float = 1030.0
+    l1_pj_per_byte: float = 19.0
+    l0_pj_per_byte: float = 2.4
+    mac_pj_per_op: float = 0.56      # one MAC (mult+add, 16 bit)
+    vec_pj_per_op: float = 0.82      # one lane-op (exp counted per op)
+
+    @property
+    def dram_bytes_per_cycle(self) -> float:
+        return self.dram_gbps / self.freq_ghz
+
+    def mac_cycles(self, m: int, k: int, n: int) -> float:
+        """Cycles for an (m,k)x(k,n) matmul on one core's 16x16 mesh.
+
+        The systolic array processes a 16x16 weight-stationary tile per
+        pass streaming n; partial tiles pad to the mesh edge.
+        """
+        tiles_m = -(-m // self.mac_mesh)
+        tiles_k = -(-k // self.mac_mesh)
+        fill = 4  # pipeline fill/drain per tile pass (weight-stationary)
+        return tiles_m * tiles_k * (n + fill)
+
+    def vec_softmax_cycles(self, rows: int, n: int) -> float:
+        """Cycles for row-wise softmax of (rows, n) on one core's VEC unit.
+
+        Passes per row: max-reduce, subtract, exp, sum-reduce, divide.
+        """
+        chunks = -(-n // self.vec_lanes)
+        per_row = chunks * (
+            3 * self.vec_ew_cost + self.vec_exp_cost + self.vec_div_cost
+        ) + self.vec_row_overhead
+        return rows * per_row
+
+    def vec_ops_softmax(self, rows: int, n: int) -> float:
+        """Lane-op count for the energy model."""
+        return rows * n * (3 + 1 + 1)  # max/sub/sum/div/exp as one op each
+
+
+EDGE_HW = HWConfig()

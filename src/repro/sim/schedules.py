@@ -1,0 +1,466 @@
+"""Tiled task-graph builders for the six methods of §5.
+
+Each builder maps (workload, tiling) -> list[Task] for ONE core (the two
+cores split heads symmetrically; DRAM bandwidth is split likewise), or
+returns None when the tiling is infeasible on the L1 (after the §4.3
+overwrite relaxation, where applicable).
+
+Tiling = (hh, nq, nkv): heads per stream tile (H_h), query rows per block
+(N_Q), and K/V sub-matrix rows (N_{K,V}) — the paper's multi-tiered
+factors with B=1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.sim.engine import Task
+from repro.sim.hw import HWConfig
+from repro.sim.workload import AttentionWorkload
+
+METHODS = ("layerwise", "softpipe", "flat", "tileflow", "fusemax", "mas")
+
+
+@dataclasses.dataclass(frozen=True)
+class Tiling:
+    hh: int = 1
+    nq: int = 64
+    nkv: int = 256
+
+
+class _Builder:
+    def __init__(self, w: AttentionWorkload, t: Tiling, hw: HWConfig):
+        self.w, self.t, self.hw = w, t, hw
+        self.bpe = hw.bytes_per_elem
+        self.heads_core = -(-w.heads // hw.cores)
+        self.hh = min(t.hh, self.heads_core)
+        self.nq = min(t.nq, w.seq)
+        self.nkv = min(t.nkv, w.seq)
+        self.n_head_tiles = -(-self.heads_core // self.hh)
+        self.tr = -(-w.seq // self.nq)   # Q row blocks per head tile
+        self.tc = -(-w.seq // self.nkv)  # K/V sub-tiles
+        self.dma_bpc = hw.dram_bytes_per_cycle / hw.cores
+        self.tasks: list[Task] = []
+
+    # -- primitive task emitters (return task index) --
+    def _emit(self, **kw) -> int:
+        self.tasks.append(Task(**kw))
+        return len(self.tasks) - 1
+
+    def dma_in(self, nbytes: int, deps=(), tag="") -> int:
+        return self._emit(unit="DMA", cycles=nbytes / self.dma_bpc,
+                          deps=tuple(deps), tag=tag, dram_read_bytes=nbytes,
+                          l1_bytes=nbytes)
+
+    def dma_out(self, nbytes: int, deps=(), tag="") -> int:
+        return self._emit(unit="DMA", cycles=nbytes / self.dma_bpc,
+                          deps=tuple(deps), tag=tag, dram_write_bytes=nbytes,
+                          l1_bytes=nbytes)
+
+    def mac_qk(self, deps, tag="C") -> int:
+        """C tile: (hh x nq x E) @ (E x nkv)."""
+        hh, nq, nkv, e = self.hh, self.nq, self.nkv, self.w.emb
+        cyc = hh * self.hw.mac_cycles(nq, e, nkv)
+        ops = hh * nq * nkv * e
+        l1 = (nq * e + nkv * e + nq * nkv) * hh * self.bpe
+        return self._emit(unit="MAC", cycles=cyc, deps=tuple(deps), tag=tag,
+                          mac_ops=ops, l1_bytes=l1)
+
+    def mac_pv(self, deps, tag="O") -> int:
+        """O tile accumulate: (hh x nq x nkv) @ (nkv x E)."""
+        hh, nq, nkv, e = self.hh, self.nq, self.nkv, self.w.emb
+        cyc = hh * self.hw.mac_cycles(nq, nkv, e)
+        ops = hh * nq * nkv * e
+        l1 = (nq * nkv + nkv * e + nq * e) * hh * self.bpe
+        return self._emit(unit="MAC", cycles=cyc, deps=tuple(deps), tag=tag,
+                          mac_ops=ops, l1_bytes=l1)
+
+    def vec_softmax(self, deps, cols=None, rows=None, tag="P") -> int:
+        hh, nq = self.hh, self.nq
+        n = self.w.seq if cols is None else cols
+        r = hh * nq if rows is None else rows
+        cyc = self.hw.vec_softmax_cycles(r, n)
+        ops = self.hw.vec_ops_softmax(r, n)
+        l1 = 2 * r * n * self.bpe
+        return self._emit(unit="VEC", cycles=cyc, deps=tuple(deps), tag=tag,
+                          vec_ops=ops, l1_bytes=l1)
+
+    # -- tile byte sizes --
+    @property
+    def q_tile_b(self):  # Q_i
+        return self.hh * self.nq * self.w.emb * self.bpe
+
+    @property
+    def kv_tile_b(self):  # one K or V sub-tile
+        return self.hh * self.nkv * self.w.emb * self.bpe
+
+    @property
+    def kv_head_b(self):  # full K or V for a head tile
+        return self.hh * self.w.seq * self.w.emb * self.bpe
+
+    @property
+    def row_buf_b(self):  # one C/P row buffer
+        return self.hh * self.nq * self.w.seq * self.bpe
+
+    @property
+    def o_tile_b(self):
+        return self.hh * self.nq * self.w.emb * self.bpe
+
+
+def _rows(b: _Builder):
+    for ht in range(b.n_head_tiles):
+        for i in range(b.tr):
+            yield ht, i
+
+
+# ---------------------------------------------------------------------------
+# MAS-Attention (Alg. 1): two streams, warm-up/regular/finalize, overwrite.
+# ---------------------------------------------------------------------------
+
+
+def build_mas(w, t, hw) -> list[Task] | None:
+    b = _Builder(w, t, hw)
+    qo = 2 * (b.q_tile_b + b.o_tile_b)
+    rb2 = 2 * b.row_buf_b  # P_{i-1} + C_i double row buffer (§5.6 trade)
+    kv_full = b.kv_head_b  # one of K / V pinned for a head tile
+    if rb2 + 2 * kv_full + qo <= hw.l1_bytes:
+        mode = "resident"            # ideal regime: K and V pinned
+    elif rb2 + kv_full + qo <= hw.l1_bytes:
+        mode = "resident_overwrite"  # §4.3 Fig.2: P_i steals V's slot;
+        # K stays pinned, V reloads from DRAM each row block
+    elif rb2 + 4 * b.kv_tile_b + qo <= hw.l1_bytes:
+        mode = "streamed"            # fine-grained sub-tiles only
+    elif rb2 + qo <= hw.l1_bytes:
+        mode = "streamed_overwrite"  # stream + stall/reload/redo
+    else:
+        return None  # §5.6: even two row buffers overflow L1
+    overwrite = mode.endswith("overwrite")
+    k_resident = mode in ("resident", "resident_overwrite")
+    v_resident = mode == "resident"
+
+    rows = list(_rows(b))
+    c_last: dict[int, int] = {}   # row -> last C MAC task
+    p_task: dict[int, int] = {}   # row -> softmax task
+    o_last: dict[int, int] = {}   # row -> last O MAC task
+    kv_loaded: dict[int, list[int]] = {}  # head tile -> K dma tasks
+
+    def load_kv(ht, which, resident_flag) -> list[int]:
+        if resident_flag:
+            key = (ht, which)
+            if key not in kv_loaded:
+                kv_loaded[key] = [
+                    b.dma_in(b.kv_tile_b, tag=f"{which}{ht}.{j}")
+                    for j in range(b.tc)
+                ]
+            return kv_loaded[key]
+        return [b.dma_in(b.kv_tile_b, tag=f"{which}{ht}.{j}")
+                for j in range(b.tc)]
+
+    def emit_c(r):
+        ht, i = rows[r]
+        qd = b.dma_in(b.q_tile_b, tag=f"Q{r}")
+        kds = load_kv(ht, "K", k_resident)
+        # Two row buffers: C_r reuses row r-2's buffer, freed by O_{r-2}.
+        buf = [o_last[r - 2]] if r - 2 in o_last else []
+        last = None
+        for j in range(b.tc):
+            last = b.mac_qk(deps=[qd, kds[j]] + buf, tag=f"C{r}.{j}")
+        c_last[r] = last
+
+    def emit_p(r):
+        p_task[r] = b.vec_softmax(deps=[c_last[r]], tag=f"P{r}")
+
+    def emit_o(r):
+        ht, i = rows[r]
+        if overwrite:
+            # §4.3: V was overwritten so P_r could finish — the MAC
+            # stream stalls on the softmax, then V reloads from DRAM
+            # and the interrupted MatMul redoes its tiles.
+            vds = [b.dma_in(b.kv_tile_b, deps=[p_task[r]],
+                            tag=f"Vreload{r}.{j}") for j in range(b.tc)]
+        else:
+            vds = load_kv(ht, "V", v_resident)
+        last = None
+        for j in range(b.tc):
+            last = b.mac_pv(deps=[p_task[r], vds[j]], tag=f"O{r}.{j}")
+        o_last[r] = last
+        b.dma_out(b.o_tile_b, deps=[last], tag=f"Oout{r}")
+
+    # Alg. 1 issue order on the MAC queue: C1, C2, then (O_{i-2}, C_i)...
+    n = len(rows)
+    if n == 1:
+        emit_c(0); emit_p(0); emit_o(0)
+    else:
+        emit_c(0)
+        emit_c(1)
+        emit_p(0)
+        for i in range(2, n):
+            emit_o(i - 2)
+            emit_p(i - 1)
+            emit_c(i)
+        emit_o(n - 2)
+        emit_p(n - 1)
+        emit_o(n - 1)
+    return b.tasks
+
+
+# ---------------------------------------------------------------------------
+# FLAT: fused, on-chip, strictly sequential tile stages (C_i -> P_i -> O_i).
+# ---------------------------------------------------------------------------
+
+
+def build_flat(w, t, hw) -> list[Task] | None:
+    b = _Builder(w, t, hw)
+    qo = 2 * (b.q_tile_b + b.o_tile_b)
+    resident = b.row_buf_b + 2 * b.kv_head_b + qo <= hw.l1_bytes
+    streamed = b.row_buf_b + 4 * b.kv_tile_b + qo <= hw.l1_bytes
+    if not (resident or streamed):
+        return None
+
+    kv_loaded: dict = {}
+
+    def load_kv(ht, which):
+        if resident:
+            key = (ht, which)
+            if key not in kv_loaded:
+                kv_loaded[key] = [b.dma_in(b.kv_tile_b) for _ in range(b.tc)]
+            return kv_loaded[key]
+        return [b.dma_in(b.kv_tile_b) for _ in range(b.tc)]
+
+    prev_o = None  # strict stage chain: C_{i+1} starts after O_i finishes
+    for ht, i in _rows(b):
+        qd = b.dma_in(b.q_tile_b)
+        kds = load_kv(ht, "K")
+        last = None
+        for j in range(b.tc):
+            deps = [qd, kds[j]] + ([prev_o] if prev_o is not None else [])
+            last = b.mac_qk(deps=deps)
+        p = b.vec_softmax(deps=[last])
+        vds = load_kv(ht, "V")
+        last_o = None
+        for j in range(b.tc):
+            last_o = b.mac_pv(deps=[p, vds[j]])
+        prev_o = last_o
+        b.dma_out(b.o_tile_b, deps=[last_o])
+    return b.tasks
+
+
+# ---------------------------------------------------------------------------
+# Layer-Wise: unfused; C and P round-trip DRAM; operator barriers.
+# ---------------------------------------------------------------------------
+
+
+def build_layerwise(w, t, hw) -> list[Task] | None:
+    b = _Builder(w, t, hw)
+    if b.row_buf_b + 4 * b.kv_tile_b + 2 * b.q_tile_b > hw.l1_bytes:
+        return None
+    barrier: list[int] = []
+
+    # Stage 1: C = QK^T, spill C to DRAM
+    stage: list[int] = []
+    for ht, i in _rows(b):
+        qd = b.dma_in(b.q_tile_b)
+        last = None
+        for j in range(b.tc):
+            kd = b.dma_in(b.kv_tile_b)
+            last = b.mac_qk(deps=[qd, kd])
+        stage.append(b.dma_out(b.row_buf_b, deps=[last], tag="Cout"))
+    barrier = stage
+
+    # Stage 2: P = softmax(C), C from DRAM, P to DRAM
+    stage = []
+    for ht, i in _rows(b):
+        cd = b.dma_in(b.row_buf_b, deps=barrier, tag="Cin")
+        p = b.vec_softmax(deps=[cd])
+        stage.append(b.dma_out(b.row_buf_b, deps=[p], tag="Pout"))
+    barrier = stage
+
+    # Stage 3: O = PV, P from DRAM
+    for ht, i in _rows(b):
+        pd = b.dma_in(b.row_buf_b, deps=barrier, tag="Pin")
+        last = None
+        for j in range(b.tc):
+            vd = b.dma_in(b.kv_tile_b)
+            last = b.mac_pv(deps=[pd, vd])
+        b.dma_out(b.o_tile_b, deps=[last])
+    return b.tasks
+
+
+# ---------------------------------------------------------------------------
+# Soft-Pipe: pipelines QK^T with softmax; P round-trips DRAM; PV sequential.
+# ---------------------------------------------------------------------------
+
+
+def build_softpipe(w, t, hw) -> list[Task] | None:
+    b = _Builder(w, t, hw)
+    if 2 * b.row_buf_b + 4 * b.kv_tile_b + 2 * b.q_tile_b > hw.l1_bytes:
+        return None
+    pouts: list[int] = []
+    for ht, i in _rows(b):
+        qd = b.dma_in(b.q_tile_b)
+        last = None
+        for j in range(b.tc):
+            kd = b.dma_in(b.kv_tile_b)
+            last = b.mac_qk(deps=[qd, kd])
+        p = b.vec_softmax(deps=[last])  # overlaps next row's C on MAC
+        pouts.append(b.dma_out(b.row_buf_b, deps=[p], tag="Pout"))
+    for ht, i in _rows(b):
+        pd = b.dma_in(b.row_buf_b, deps=pouts, tag="Pin")
+        last = None
+        for j in range(b.tc):
+            vd = b.dma_in(b.kv_tile_b)
+            last = b.mac_pv(deps=[pd, vd])
+        b.dma_out(b.o_tile_b, deps=[last])
+    return b.tasks
+
+
+# ---------------------------------------------------------------------------
+# TileFlow-style: fused + pipelined tree dataflow, but (a) no H_h tier
+# (single fusion level: heads processed one at a time), (b) no K/V
+# sub-matrix tier, (c) single score buffer — C_{i+1} must wait for P_i to
+# release it — and (d) no overwrite relaxation. These are exactly the
+# pieces MAS adds (multi-tier tiling + double row buffer + §4.3).
+# ---------------------------------------------------------------------------
+
+
+def build_tileflow(w, t, hw) -> list[Task] | None:
+    t1 = Tiling(hh=1, nq=t.nq, nkv=w.seq)  # tiers collapsed
+    b = _Builder(w, t1, hw)
+    qo = 2 * (b.q_tile_b + b.o_tile_b)
+    if b.row_buf_b + 2 * b.kv_head_b + qo > hw.l1_bytes:
+        return None  # no overwrite escape hatch
+    kv_loaded: dict = {}
+
+    def load_kv(ht, which):
+        key = (ht, which)
+        if key not in kv_loaded:
+            kv_loaded[key] = [b.dma_in(b.kv_tile_b)]
+        return kv_loaded[key]
+
+    rows = list(_rows(b))
+    c_last, p_task = {}, {}
+
+    def emit_c(r):
+        ht, _ = rows[r]
+        qd = b.dma_in(b.q_tile_b)
+        kd = load_kv(ht, "K")[0]
+        deps = [qd, kd]
+        if r - 1 in p_task:
+            deps.append(p_task[r - 1])  # single buffer: wait for release
+        c_last[r] = b.mac_qk(deps=deps)
+
+    def emit_p(r):
+        p_task[r] = b.vec_softmax(deps=[c_last[r]])
+
+    def emit_o(r):
+        ht, _ = rows[r]
+        vd = load_kv(ht, "V")[0]
+        last = b.mac_pv(deps=[p_task[r], vd])
+        b.dma_out(b.o_tile_b, deps=[last])
+
+    n = len(rows)
+    if n == 1:
+        emit_c(0); emit_p(0); emit_o(0)
+    else:
+        emit_c(0)
+        emit_p(0)
+        emit_c(1)
+        for i in range(2, n):
+            emit_o(i - 2); emit_p(i - 1); emit_c(i)
+        emit_o(n - 2); emit_p(n - 1); emit_o(n - 1)
+    return b.tasks
+
+
+# ---------------------------------------------------------------------------
+# FuseMax-style: online-softmax einsum cascade, MAC/VEC pipelined per
+# kv tile; fixed (manually chosen) tiling — the caller pins Tiling. The
+# 12-primitive einsum decomposition runs each softmax sub-op as a separate
+# un-fused VEC pass (extra passes over the tile + running-stat updates),
+# modeled as a 2x VEC-pass multiplier.
+# ---------------------------------------------------------------------------
+
+FUSEMAX_VEC_PASSES = 2.0
+
+
+def build_fusemax(w, t, hw) -> list[Task] | None:
+    b = _Builder(w, t, hw)
+    qo = 2 * (b.q_tile_b + b.o_tile_b)
+    # online softmax: only (nq, nkv) score tiles live on-chip
+    tile_buf = 2 * b.hh * b.nq * b.nkv * b.bpe
+    resident = tile_buf + 2 * b.kv_head_b + qo <= hw.l1_bytes
+    if not resident and tile_buf + 4 * b.kv_tile_b + qo > hw.l1_bytes:
+        return None
+    kv_loaded: dict = {}
+
+    def load_kv(ht, which, j):
+        if resident:
+            key = (ht, which)
+            if key not in kv_loaded:
+                kv_loaded[key] = [b.dma_in(b.kv_tile_b) for _ in range(b.tc)]
+            return kv_loaded[key][j]
+        return b.dma_in(b.kv_tile_b)
+    def vec_partial(c_dep, i, j):
+        # partial softmax on the tile + running (m, l) + acc rescale
+        r = b.hh * b.nq
+        cyc = FUSEMAX_VEC_PASSES * hw.vec_softmax_cycles(r, b.nkv) + r * (
+            2 * hw.vec_ew_cost + w.emb / hw.vec_lanes * 2
+        )
+        ops = hw.vec_ops_softmax(r, b.nkv) + 2 * r * w.emb
+        return b._emit(unit="VEC", cycles=cyc, deps=(c_dep,),
+                       tag=f"p{i}.{j}", vec_ops=ops,
+                       l1_bytes=2 * r * b.nkv * b.bpe)
+
+    for ht, i in _rows(b):
+        # Software-pipelined einsum cascade: the MAC queue runs
+        # S_{j+1} ahead of A_j so the VEC partial-softmax overlaps.
+        qd = b.dma_in(b.q_tile_b)
+        s_tasks, p_tasks = [], []
+
+        def emit_s(j):
+            kd = load_kv(ht, "K", j)
+            s_tasks.append(b.mac_qk(deps=[qd, kd], tag=f"S{i}.{j}"))
+            p_tasks.append(vec_partial(s_tasks[-1], i, j))
+
+        prev_acc = None
+
+        def emit_a(j):
+            nonlocal prev_acc
+            vd = load_kv(ht, "V", j)
+            deps = [p_tasks[j], vd] + (
+                [prev_acc] if prev_acc is not None else []
+            )
+            prev_acc = b.mac_pv(deps=deps, tag=f"A{i}.{j}")
+
+        emit_s(0)
+        for j in range(1, b.tc):
+            emit_s(j)
+            emit_a(j - 1)
+        emit_a(b.tc - 1)
+        b.dma_out(b.o_tile_b, deps=[prev_acc])
+    return b.tasks
+
+
+_BUILDERS = {
+    "mas": build_mas,
+    "flat": build_flat,
+    "layerwise": build_layerwise,
+    "softpipe": build_softpipe,
+    "tileflow": build_tileflow,
+    "fusemax": build_fusemax,
+}
+
+
+def build_schedule(method: str, w: AttentionWorkload, t: Tiling,
+                   hw: HWConfig) -> list[Task] | None:
+    return _BUILDERS[method](w, t, hw)
+
+
+def tiling_space(w: AttentionWorkload, hw: HWConfig) -> list[Tiling]:
+    """The search space of multi-tiered tiling factors (§4.2)."""
+    heads_core = -(-w.heads // hw.cores)
+    hhs = sorted({h for h in (1, 2, 4, 8, 16) if h <= heads_core}
+                 | {heads_core})
+    nqs = sorted({n for n in (16, 32, 64, 128, 256) if n <= w.seq} | {w.seq})
+    nkvs = sorted({n for n in (64, 128, 256, 512) if n <= w.seq} | {w.seq})
+    return [Tiling(hh, nq, nkv) for hh in hhs for nq in nqs for nkv in nkvs]

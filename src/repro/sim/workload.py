@@ -1,0 +1,71 @@
+"""Attention workloads — Table 1 of the paper, plus helpers."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionWorkload:
+    name: str
+    heads: int
+    seq: int
+    emb: int  # per-head embedding (Emb_{K,V} column of Table 1)
+    batch: int = 1
+
+    @property
+    def mac_ops(self) -> int:
+        """Total MACs: QK^T + PV."""
+        return 2 * self.batch * self.heads * self.seq * self.seq * self.emb
+
+    @property
+    def softmax_elems(self) -> int:
+        return self.batch * self.heads * self.seq * self.seq
+
+    def qkv_bytes(self, bpe: int) -> int:
+        return 3 * self.batch * self.heads * self.seq * self.emb * bpe
+
+    def o_bytes(self, bpe: int) -> int:
+        return self.batch * self.heads * self.seq * self.emb * bpe
+
+    def score_bytes(self, bpe: int) -> int:
+        """One full C or P matrix."""
+        return self.batch * self.heads * self.seq * self.seq * bpe
+
+
+# Table 1: Network Configuration and Hyper-Parameters.
+PAPER_NETWORKS = {
+    "bert-base-t5-base": AttentionWorkload("bert-base-t5-base", 12, 512, 64),
+    "bert-large-t5-large": AttentionWorkload("bert-large-t5-large", 16, 512, 64),
+    "bert-small": AttentionWorkload("bert-small", 8, 512, 64),
+    "llama3-8b-t5-3b": AttentionWorkload("llama3-8b-t5-3b", 32, 512, 128),
+    "t5-mini-small": AttentionWorkload("t5-mini-small", 8, 512, 32),
+    "vit-b-14": AttentionWorkload("vit-b-14", 12, 196, 64),
+    "vit-l-14": AttentionWorkload("vit-l-14", 16, 196, 64),
+    "vit-h-14": AttentionWorkload("vit-h-14", 16, 196, 80),
+    "vit-b-16": AttentionWorkload("vit-b-16", 12, 256, 64),
+    "vit-l-16": AttentionWorkload("vit-l-16", 16, 256, 64),
+    "vit-h-16": AttentionWorkload("vit-h-16", 16, 256, 80),
+    "xlm": AttentionWorkload("xlm", 8, 512, 128),
+}
+
+# Paper-reported cycle counts (10^6) for validation (Table 2).
+PAPER_TABLE2_CYCLES = {
+    #                      layerwise softpipe  flat  tileflow fusemax  mas
+    "bert-base-t5-base":    (3.637, 2.064, 1.573, 0.799, 0.992, 0.786),
+    "bert-large-t5-large":  (5.505, 2.753, 1.835, 1.311, 1.323, 1.049),
+    "bert-small":           (2.753, 1.376, 0.918, 0.655, 0.661, 0.524),
+    "llama3-8b-t5-3b":      (12.845, 8.389, 4.719, 5.243, 4.864, 4.194),
+    "t5-mini-small":        (2.228, 1.180, 0.721, 0.328, 0.384, 0.262),
+    "vit-b-14":             (0.612, 0.381, 0.266, 0.263, 0.196, 0.151),
+    "vit-l-14":             (1.242, 0.508, 0.354, 0.351, 0.262, 0.201),
+    "vit-h-14":             (1.355, 0.558, 0.405, 0.439, 0.318, 0.251),
+    "vit-b-16":             (1.081, 0.590, 0.426, 0.249, 0.259, 0.197),
+    "vit-l-16":             (1.311, 0.786, 0.524, 0.332, 0.346, 0.262),
+    "vit-h-16":             (1.376, 0.852, 0.590, 0.414, 0.419, 0.328),
+    "xlm":                  (4.194, 2.097, 1.180, 1.311, 1.216, 1.049),
+}
+
+PAPER_TABLE2_ORDER = (
+    "layerwise", "softpipe", "flat", "tileflow", "fusemax", "mas"
+)

@@ -1,0 +1,171 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracle.
+
+Everything runs in interpret mode (CPU executes the kernel body), per the
+container constraints. Tolerances: fp32 tight, bf16 loose (inputs are cast,
+accumulation stays fp32).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import attention, decode_attention
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-5
+    )
+
+
+METHODS = ["mas_resident", "mas_streamed", "flash"]
+
+SHAPES = [
+    # (b, hq, hkv, nq, nkv, e)
+    (1, 1, 1, 128, 128, 64),
+    (2, 4, 2, 256, 256, 64),     # GQA 2:1
+    (1, 8, 1, 128, 384, 128),    # MQA
+    (1, 2, 2, 64, 1024, 128),    # long kv
+    (2, 3, 3, 200, 300, 80),     # ragged (padding + masking path)
+    (1, 16, 8, 128, 128, 128),   # qwen3-like head config
+]
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("shape", SHAPES, ids=[str(s) for s in SHAPES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [False, True])
+def test_attention_matches_ref(method, shape, dtype, causal):
+    b, hq, hkv, nq, nkv, e = shape
+    rng = np.random.default_rng(hash((shape, str(dtype), causal)) % 2**32)
+    q = _rand(rng, (b, hq, nq, e), dtype)
+    k = _rand(rng, (b, hkv, nkv, e), dtype)
+    v = _rand(rng, (b, hkv, nkv, e), dtype)
+    out = attention(q, k, v, method=method, causal=causal,
+                    blk_q=64, blk_kv=128)
+    expect = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        **_tol(dtype),
+    )
+
+
+@pytest.mark.parametrize("window", [32, 128, 1000])
+def test_sliding_window(window):
+    rng = np.random.default_rng(window)
+    q = _rand(rng, (1, 4, 256, 64), jnp.float32)
+    k = _rand(rng, (1, 1, 256, 64), jnp.float32)
+    v = _rand(rng, (1, 1, 256, 64), jnp.float32)
+    out = attention(q, k, v, method="flash", window=window,
+                    blk_q=64, blk_kv=128)
+    expect = ref.attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_window_routes_mas_to_flash():
+    """MAS dataflow has no window support; the wrapper must reroute."""
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (1, 2, 128, 64), jnp.float32)
+    k = _rand(rng, (1, 2, 128, 64), jnp.float32)
+    v = _rand(rng, (1, 2, 128, 64), jnp.float32)
+    out = attention(q, k, v, method="mas", window=32)
+    expect = ref.attention(q, k, v, window=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("blk_q,blk_kv", [(8, 128), (32, 256), (128, 128),
+                                          (256, 512)])
+def test_tiling_factor_sweep(blk_q, blk_kv):
+    """Output must be invariant to the paper's tiling factors (N_Q, N_KV)."""
+    rng = np.random.default_rng(blk_q * 1000 + blk_kv)
+    q = _rand(rng, (1, 2, 256, 64), jnp.float32)
+    k = _rand(rng, (1, 2, 512, 64), jnp.float32)
+    v = _rand(rng, (1, 2, 512, 64), jnp.float32)
+    expect = ref.attention(q, k, v)
+    for method in METHODS:
+        out = attention(q, k, v, method=method, blk_q=blk_q, blk_kv=blk_kv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=2e-5, rtol=2e-5,
+                                   err_msg=f"{method} {blk_q}x{blk_kv}")
+
+
+def test_mas_tiled_ref_matches_dense_ref():
+    """Alg. 1-4 jnp emulation == dense attention (exactness of the paper)."""
+    rng = np.random.default_rng(7)
+    q = _rand(rng, (2, 4, 128, 64), jnp.float32)
+    k = _rand(rng, (2, 2, 256, 64), jnp.float32)
+    v = _rand(rng, (2, 2, 256, 64), jnp.float32)
+    a = ref.mas_attention_tiled(q, k, v, blk_q=32, blk_kv=64)
+    b = ref.attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("hq,hkv", [(8, 8), (16, 8), (8, 1), (20, 20)])
+@pytest.mark.parametrize("kv_len", [1, 100, 511, 512])
+def test_decode(hq, hkv, kv_len):
+    rng = np.random.default_rng(hq * 37 + kv_len)
+    b, s, e = 2, 512, 64
+    q = _rand(rng, (b, hq, e), jnp.float32)
+    kc = _rand(rng, (b, hkv, s, e), jnp.float32)
+    vc = _rand(rng, (b, hkv, s, e), jnp.float32)
+    out = decode_attention(q, kc, vc, kv_len, blk_kv=128)
+    expect = ref.decode_attention(q, kc, vc, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_bf16():
+    rng = np.random.default_rng(5)
+    q = _rand(rng, (1, 16, 128), jnp.bfloat16)
+    kc = _rand(rng, (1, 8, 640, 128), jnp.bfloat16)
+    vc = _rand(rng, (1, 8, 640, 128), jnp.bfloat16)
+    out = decode_attention(q, kc, vc, 400)
+    expect = ref.decode_attention(q, kc, vc, 400)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_policy_auto_dispatch():
+    from repro.core.policy import choose_attention_method
+
+    # short kv: resident
+    d = choose_attention_method(n_kv=2048, e=128, itemsize=2)
+    assert d.method == "mas_resident"
+    # mid kv: K/V too big to pin, row buffer fits -> streamed overwrite
+    d = choose_attention_method(n_kv=65536, e=128, itemsize=2,
+                                vmem_budget=48 * 2**20)
+    assert d.method == "mas_streamed"
+    # huge kv: even one score row overflows -> paper infeasible -> flash
+    d = choose_attention_method(n_kv=2**20, e=128, itemsize=2,
+                                vmem_budget=16 * 2**20)
+    assert d.method == "flash"
+    with pytest.raises(ValueError):
+        choose_attention_method(n_kv=2**21, e=128, itemsize=2,
+                                vmem_budget=2**20, prefer="mas")
+
+
+def test_grad_flows_through_flash():
+    """Serving is the paper's scope, but training must not be blocked."""
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (1, 2, 128, 64), jnp.float32)
+    k = _rand(rng, (1, 2, 128, 64), jnp.float32)
+    v = _rand(rng, (1, 2, 128, 64), jnp.float32)
+
+    def loss(q):
+        return jnp.sum(ref.attention(q, k, v, causal=True) ** 2)
+
+    g = jax.grad(loss)(q)
+    assert np.isfinite(np.asarray(g)).all()

@@ -1,0 +1,100 @@
+"""Hypothesis property tests: attention invariants + MAS exactness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import attention
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _qkv(seed, b, hq, hkv, nq, nkv, e):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, hq, nq, e)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, nkv, e)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, nkv, e)), jnp.float32)
+    return q, k, v
+
+
+dims = st.tuples(
+    st.integers(1, 2),                 # b
+    st.sampled_from([(2, 1), (4, 2), (2, 2)]),  # (hq, hkv)
+    st.integers(3, 48),                # nq
+    st.integers(3, 80),                # nkv
+    st.sampled_from([16, 32]),         # e
+    st.integers(0, 2**31 - 1),
+)
+
+
+@given(dims)
+@settings(**SETTINGS)
+def test_output_rows_are_convex_combinations(t):
+    """softmax rows sum to 1 -> each output element lies within the
+    [min, max] of V along the key axis."""
+    b, (hq, hkv), nq, nkv, e, seed = t
+    q, k, v = _qkv(seed, b, hq, hkv, nq, nkv, e)
+    o = np.asarray(ref.attention(q, k, v))
+    vr = np.asarray(ref._repeat_kv(v, hq // hkv))
+    lo = vr.min(axis=2, keepdims=True) - 1e-4
+    hi = vr.max(axis=2, keepdims=True) + 1e-4
+    assert (o >= lo).all() and (o <= hi).all()
+
+
+@given(dims)
+@settings(**SETTINGS)
+def test_kv_permutation_equivariance(t):
+    """Non-causal attention is invariant to permuting the KV positions."""
+    b, (hq, hkv), nq, nkv, e, seed = t
+    q, k, v = _qkv(seed, b, hq, hkv, nq, nkv, e)
+    perm = np.random.default_rng(seed).permutation(nkv)
+    o1 = ref.attention(q, k, v)
+    o2 = ref.attention(q, k[:, :, perm], v[:, :, perm])
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=1e-5, rtol=1e-5)
+
+
+@given(dims)
+@settings(**SETTINGS)
+def test_mas_kernel_matches_oracle(t):
+    b, (hq, hkv), nq, nkv, e, seed = t
+    q, k, v = _qkv(seed, b, hq, hkv, nq, nkv, e)
+    o = attention(q, k, v, method="mas_streamed", blk_q=16, blk_kv=128)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref.attention(q, k, v)),
+                               atol=3e-5, rtol=3e-5)
+
+
+@given(dims)
+@settings(**SETTINGS)
+def test_causal_prefix_invariance(t):
+    """With causal masking, output at position i depends only on keys
+    <= i: truncating the future changes nothing."""
+    b, (hq, hkv), nq, nkv, e, seed = t
+    n = min(nq, nkv)
+    q, k, v = _qkv(seed, b, hq, hkv, n, n, e)
+    full = ref.attention(q, k, v, causal=True)
+    half = max(1, n // 2)
+    trunc = ref.attention(q[:, :, :half], k[:, :, :half], v[:, :, :half],
+                          causal=True)
+    np.testing.assert_allclose(np.asarray(full[:, :, :half]),
+                               np.asarray(trunc), atol=1e-5, rtol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_scale_invariance_of_constant_shift(seed, shift):
+    """Adding a constant to all scores doesn't change softmax -> shifting
+    all of K by a vector orthogonal to nothing... instead: duplicate-key
+    check: duplicating every KV entry leaves attention unchanged."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 2, 5, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 7, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 7, 16)), jnp.float32)
+    o1 = ref.attention(q, k, v)
+    k2 = jnp.concatenate([k, k], axis=2)
+    v2 = jnp.concatenate([v, v], axis=2)
+    o2 = ref.attention(q, k2, v2)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=1e-5, rtol=1e-5)

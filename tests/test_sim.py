@@ -1,0 +1,118 @@
+"""Simulator invariants + paper-claims regression gates."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sim import EDGE_HW, PAPER_NETWORKS, search_tiling, simulate
+from repro.sim.schedules import METHODS, Tiling, build_schedule, tiling_space
+from repro.sim.workload import AttentionWorkload, PAPER_TABLE2_CYCLES
+
+
+def test_mas_not_slower_than_flat_same_tiling():
+    for name, w in PAPER_NETWORKS.items():
+        for t in [Tiling(1, 64, 256), Tiling(2, 128, 512)]:
+            m = build_schedule("mas", w, t, EDGE_HW)
+            f = build_schedule("flat", w, t, EDGE_HW)
+            if m is None or f is None:
+                continue
+            rm, rf = simulate(m, EDGE_HW), simulate(f, EDGE_HW)
+            assert rm.cycles <= rf.cycles * 1.01, (name, t)
+
+
+def test_makespan_lower_bounds():
+    """Makespan >= every unit's busy time; >= MAC-only ideal."""
+    w = PAPER_NETWORKS["bert-base-t5-base"]
+    for method in METHODS:
+        r = search_tiling(method, w, EDGE_HW, "grid").result
+        for unit, busy in r.busy.items():
+            assert r.cycles >= busy * 0.999, (method, unit)
+
+
+def test_pe_work_is_schedule_invariant():
+    """§5.3.3: MAC/VEC op counts identical across methods (same math)."""
+    w = PAPER_NETWORKS["bert-small"]
+    ops = {}
+    for method in METHODS:
+        r = search_tiling(method, w, EDGE_HW, "grid").result
+        ops[method] = (r.mac_ops, r.vec_ops)
+    macs = {m: o[0] for m, o in ops.items()}
+    assert len({round(v) for v in macs.values()}) == 1, macs
+
+
+def test_writes_equal_mas_flat():
+    """§5.4.1: both write only O to DRAM."""
+    w = PAPER_NETWORKS["bert-base-t5-base"]
+    t = Tiling(1, 64, 256)
+    rm = simulate(build_schedule("mas", w, t, EDGE_HW), EDGE_HW)
+    rf = simulate(build_schedule("flat", w, t, EDGE_HW), EDGE_HW)
+    assert rm.dram_write_bytes == rf.dram_write_bytes
+
+
+def test_table2_geomean_speedups_within_band():
+    """Regression gate: reproduced geomean speedups stay in a band around
+    the paper's (Table 2): FLAT 1.70x, Layer-Wise 5.09x, Soft-Pipe 2.78x."""
+    speed = {m: [] for m in ("layerwise", "softpipe", "flat")}
+    for name, w in PAPER_NETWORKS.items():
+        mas = search_tiling("mas", w, EDGE_HW, "grid").result.cycles
+        for m in speed:
+            r = search_tiling(m, w, EDGE_HW, "grid").result.cycles
+            speed[m].append(r / mas)
+    geo = {m: math.exp(sum(math.log(x) for x in v) / len(v))
+           for m, v in speed.items()}
+    assert 1.3 <= geo["flat"] <= 2.1, geo
+    assert 3.0 <= geo["layerwise"] <= 6.5, geo
+    assert 1.8 <= geo["softpipe"] <= 3.5, geo
+
+
+def test_mas_absolute_cycles_close_to_paper():
+    """Our searched MAS cycles land within 35% of the paper's Table 2."""
+    for name, w in PAPER_NETWORKS.items():
+        ours = search_tiling("mas", w, EDGE_HW, "grid").result.cycles / 1e6
+        paper = PAPER_TABLE2_CYCLES[name][-1]
+        assert abs(ours - paper) / paper < 0.35, (name, ours, paper)
+
+
+def test_overwrite_regime_inflates_reads_only():
+    import dataclasses
+
+    w = PAPER_NETWORKS["bert-base-t5-base"]
+    big = Tiling(hh=6, nq=128, nkv=512)
+    bpe = EDGE_HW.bytes_per_elem
+    rb = big.hh * big.nq * w.seq * bpe
+    kv = big.hh * w.seq * w.emb * bpe
+    hw = dataclasses.replace(EDGE_HW, l1_bytes=int(2 * rb + 1.5 * kv))
+    tight = simulate(build_schedule("mas", w, big, hw), hw)
+    roomy = simulate(build_schedule("mas", w, big, EDGE_HW), EDGE_HW)
+    assert tight.dram_read_bytes > roomy.dram_read_bytes
+    assert tight.dram_write_bytes == roomy.dram_write_bytes
+
+
+@given(
+    st.sampled_from(list(PAPER_NETWORKS)),
+    st.sampled_from(METHODS),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_any_feasible_tiling_simulates_clean(net, method, seed):
+    import random
+
+    w = PAPER_NETWORKS[net]
+    space = tiling_space(w, EDGE_HW)
+    t = random.Random(seed).choice(space)
+    tasks = build_schedule(method, w, t, EDGE_HW)
+    if tasks is None:
+        return
+    r = simulate(tasks, EDGE_HW)
+    assert r.cycles > 0 and r.energy_pj > 0
+    assert r.dram_read_bytes >= w.qkv_bytes(EDGE_HW.bytes_per_elem) * 0.99
+    assert r.mac_ops >= w.mac_ops  # padding never undercounts
+
+
+def test_search_strategies_agree_on_optimum():
+    w = PAPER_NETWORKS["bert-small"]
+    grid = search_tiling("mas", w, EDGE_HW, "grid").result.cycles
+    for strat in ("mcts", "ga", "random"):
+        r = search_tiling("mas", w, EDGE_HW, strat, iters=250).result.cycles
+        assert r <= grid * 1.10, (strat, r, grid)

@@ -1,0 +1,50 @@
+"""SSD Pallas kernel vs the jnp oracle (models.ssm.ssd_chunked)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan import ssd_chunked_pallas
+from repro.models.ssm import ssd_chunked
+
+
+def _inputs(seed, b, l, h, p, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    a = jnp.asarray(-np.abs(rng.standard_normal((b, l, h))) * 0.1,
+                    jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, l, h, n)) * 0.3, jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, l, h, n)) * 0.3, jnp.float32)
+    return x, a, bm, cm
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 64, 2, 16, 8),    # (B, L, H, P, N)
+    (2, 128, 3, 32, 16),
+    (1, 256, 4, 64, 32),
+])
+@pytest.mark.parametrize("chunk", [32, 64])
+def test_ssd_kernel_matches_oracle(shape, chunk):
+    b, l, h, p, n = shape
+    x, a, bm, cm = _inputs(hash(shape) % 2**31, b, l, h, p, n)
+    y_ref, s_ref = ssd_chunked(x, a, bm, cm, chunk)
+    y, s = ssd_chunked_pallas(x, a, bm, cm, chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_kernel_initial_state():
+    b, l, h, p, n = 1, 64, 2, 16, 8
+    x, a, bm, cm = _inputs(7, b, l, h, p, n)
+    s0 = jnp.asarray(np.random.default_rng(9).standard_normal((b, h, p, n)),
+                     jnp.float32) * 0.2
+    y_ref, sf_ref = ssd_chunked(x, a, bm, cm, 32, initial_state=s0)
+    y, sf = ssd_chunked_pallas(x, a, bm, cm, 32, initial_state=s0,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sf_ref),
+                               atol=2e-4, rtol=2e-4)

@@ -1,0 +1,201 @@
+"""Substrate tests: checkpoint, data, compression, elastic, sharding."""
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.data import SyntheticLMData
+from repro.distributed import sharding as shd
+from repro.distributed.compression import (
+    apply_compression,
+    init_error_feedback,
+)
+from repro.distributed.elastic import StepTimer, Watchdog, plan_remesh
+
+
+# ---------------------------------------------------------------- ckpt
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+        "nested": {"b": jnp.asarray(rng.standard_normal((4,)), jnp.bfloat16),
+                   "step": jnp.int32(7)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    mgr.save(5, t)
+    step, restored = mgr.restore_latest(jax.eval_shape(lambda: t))
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert latest_step(str(tmp_path)) == 4
+    kept = sorted(os.listdir(tmp_path))
+    assert [d for d in kept if d.startswith("step_")] == [
+        "step_000000003", "step_000000004"
+    ]
+
+
+def test_checkpoint_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(9, _tree(), blocking=False)
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 9
+
+
+def test_checkpoint_atomicity_tmp_never_visible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_checkpoint_cross_mesh_reshard(tmp_path):
+    """Save under one sharding, restore under a different one — the
+    elastic-restart path."""
+    mesh1 = jax.make_mesh((1,), ("data",))
+    t = {"w": jax.device_put(
+        jnp.arange(32.0).reshape(8, 4),
+        jax.NamedSharding(mesh1, P(None, None)))}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, t)
+    # "new mesh": single device but different spec path exercises
+    # device_put-based resharding
+    target = jax.eval_shape(lambda: t)
+    shardings = {"w": jax.NamedSharding(mesh1, P("data", None))}
+    step, restored = mgr.restore_latest(target, shardings)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(32.0).reshape(8, 4))
+
+
+# ---------------------------------------------------------------- data
+def test_data_deterministic_and_seekable():
+    d1 = SyntheticLMData(vocab_size=128, seq_len=32, global_batch=4, seed=3)
+    d2 = SyntheticLMData(vocab_size=128, seq_len=32, global_batch=4, seed=3)
+    b1, b2 = d1.batch_at(17), d2.batch_at(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = d1.batch_at(18)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_host_slicing_partitions_batch():
+    full = SyntheticLMData(vocab_size=64, seq_len=16, global_batch=8)
+    parts = [
+        SyntheticLMData(vocab_size=64, seq_len=16, global_batch=8,
+                        process_index=i, process_count=4)
+        for i in range(4)
+    ]
+    assert all(p.local_batch == 2 for p in parts)
+    assert full.local_batch == 8
+    # labels are next-token shifted with final position masked
+    b = full.batch_at(0)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert (b["labels"][:, -1] == -1).all()
+
+
+# --------------------------------------------------------- compression
+def test_int8_error_feedback_unbiased():
+    """With feedback, accumulated compressed grads converge to the true
+    accumulated grads (residual stays bounded)."""
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.standard_normal((64, 64)) * 0.01)}
+    err = init_error_feedback(g_true)
+    acc = jnp.zeros((64, 64))
+    for _ in range(50):
+        deq, err = apply_compression(g_true, err, "int8")
+        acc = acc + deq["w"]
+    expect = 50 * g_true["w"]
+    resid = float(jnp.max(jnp.abs(acc - expect)))
+    scale = float(jnp.max(jnp.abs(g_true["w"])))
+    assert resid <= 2 * scale  # residual bounded by ~1 step, not growing
+
+
+def test_bf16_compression_close():
+    g = {"w": jnp.asarray(np.random.default_rng(1).standard_normal((32,)))}
+    err = init_error_feedback(g)
+    deq, _ = apply_compression(g, err, "bf16")
+    np.testing.assert_allclose(np.asarray(deq["w"]), np.asarray(g["w"]),
+                               rtol=1e-2)
+
+
+# -------------------------------------------------------------- elastic
+def test_plan_remesh():
+    assert plan_remesh(512)["shape"] == (2, 16, 16)
+    assert plan_remesh(256)["shape"] == (16, 16)
+    # losing 16 chips: keep model=16, shrink data
+    assert plan_remesh(240)["shape"] == (15, 16)
+    # odd counts degrade model parallelism
+    p = plan_remesh(100)
+    assert p["shape"][0] * p["shape"][1] <= 100
+
+
+def test_watchdog_detects_stragglers(tmp_path):
+    wd = Watchdog(str(tmp_path), timeout_s=0.5, dead_after=2)
+    wd.beat("w0", 10)
+    wd.beat("w1", 10)
+    st = wd.status()
+    assert not st["w0"]["straggler"]
+    st = wd.status(now=time.time() + 0.6)
+    assert st["w0"]["straggler"] and not st["w0"]["dead"]
+    st = wd.status(now=time.time() + 2.0)
+    assert st["w1"]["dead"]
+    assert sorted(wd.live_workers(now=time.time() + 0.6)) == ["w0", "w1"]
+
+
+def test_step_timer_flags_slow_steps():
+    t = StepTimer(threshold=2.0)
+    for _ in range(5):
+        assert not t.observe(1.0)
+    assert t.observe(5.0)  # straggler step
+    assert t.slow_steps == 1
+    assert abs(t.ema - 1.0) < 1e-6  # slow steps don't poison the EMA
+
+
+# ------------------------------------------------------------- sharding
+def test_param_specs_rules():
+    params = {
+        "embed": jnp.zeros((128, 16)),
+        "units": {"b0": {
+            "attn": {"wq": jnp.zeros((4, 16, 8)), "norm": jnp.zeros((1, 8))},
+            "ffn": {"w_up": jnp.zeros((4, 8, 32)),
+                    "w_down": jnp.zeros((4, 32, 8))},
+        }},
+    }
+    specs = shd.param_specs(params)
+    assert specs["embed"] == P("model", None)
+    assert specs["units"]["b0"]["attn"]["wq"] == P(None, "data", "model")
+    assert specs["units"]["b0"]["ffn"]["w_down"] == P(None, "model", "data")
+    assert specs["units"]["b0"]["attn"]["norm"] in (P(), P(None))
+
+
+def test_fit_spec_drops_nondividing_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((4, 16))
+
+    fm = FakeMesh()
+    assert shd.fit_spec(P("model", None), (51866, 128), fm) == P()
+    assert shd.fit_spec(P("model", None), (51200, 128), fm) == P("model")
+    assert shd.fit_spec(P(("data", "model")), (128, 4), fm) == P(
+        ("data", "model")
+    )
+    assert shd.fit_spec(P("data", "model"), (101, 32), fm) == P(
+        None, "model"
+    )
