@@ -26,6 +26,8 @@ def main() -> None:
     dram_access.main(emit)
     from benchmarks import fig7_search
     fig7_search.main(emit)
+    from benchmarks import causal_prefill
+    causal_prefill.main(emit)
     from benchmarks import seq_limit
     seq_limit.main(emit)
     from benchmarks import kernel_bench

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Reproducible test entry point: tier-1 suite + a fast interpret-mode
+# kernel parity smoke (catches Pallas lowering regressions even when the
+# full suite is filtered).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+python - <<'PY'
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ops import attention
+
+rng = np.random.default_rng(0)
+q = jnp.asarray(rng.standard_normal((1, 4, 192, 64)), jnp.float32)
+k = jnp.asarray(rng.standard_normal((1, 2, 320, 64)), jnp.float32)
+v = jnp.asarray(rng.standard_normal((1, 2, 320, 64)), jnp.float32)
+for causal in (False, True):
+    expect = ref.attention(q, k, v, causal=causal)
+    for method in ("mas_resident", "mas_streamed", "flash"):
+        out = attention(q, k, v, method=method, causal=causal,
+                        blk_q=64, blk_kv=128, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(expect), atol=3e-5, rtol=3e-5,
+            err_msg=f"{method} causal={causal}",
+        )
+print("kernel parity smoke OK")
+PY

@@ -37,27 +37,56 @@ class KernelChoice:
     vpu_s: float
 
 
+def _causal_fraction(n_q: int, n_kv: int, blk_q: int, blk_kv: int) -> float:
+    """Fraction of the dense KV-tile grid a causal prefill actually touches.
+
+    Mirrors the kernels' tile bounds exactly: Q row block iq computes
+    n_needed(iq) = min(nkv_tiles, (iq*blk_q + blk_q - 1)//blk_kv + 1)
+    whole KV tiles (begin-aligned causal, see ref.attention). That is
+    ~(1 + 1/n_tiles)/2 for square prefill, (n_q + blk_q)/(2 n_kv) when
+    n_kv >> n_q, and ~1 - n_kv/(2 n_q) when n_q >> n_kv (late rows see
+    every key but early rows still prune). Charging tile-granular work —
+    not the triangle area — keeps the tuner able to rank blk_kv choices.
+    """
+    tr = max(1, -(-n_q // blk_q))
+    nkv_tiles = max(1, -(-n_kv // blk_kv))
+    live = sum(
+        min(n_kv, (min(nkv_tiles, (i * blk_q + blk_q - 1) // blk_kv + 1))
+            * blk_kv)
+        for i in range(tr)
+    )
+    return min(1.0, live / (tr * n_kv))
+
+
 def _score(method: str, blk_q: int, blk_kv: int, *, b_h: int, n_q: int,
-           n_kv: int, e: int, itemsize: int) -> tuple[float, float, float]:
+           n_kv: int, e: int, itemsize: int,
+           causal: bool = False) -> tuple[float, float, float]:
     """(mxu_s, hbm_s, vpu_s) for the whole attention call."""
-    n_q_blocks = -(-n_q // blk_q) * b_h
-    flops = 4.0 * b_h * n_q * n_kv * e  # QK^T + PV
+    frac = _causal_fraction(n_q, n_kv, blk_q, blk_kv) if causal else 1.0
+    flops = 4.0 * b_h * n_q * n_kv * e * frac  # QK^T + PV, pruned tiles only
     mxu = flops / MXU_FLOPS
-    # softmax stream on the VPU: ~6 passes over the score rows
-    vpu = 6.0 * b_h * n_q * n_kv / VPU_FLOPS
+    # softmax stream on the VPU: ~6 passes over the score rows. The MAS
+    # variants normalize the FULL (blk_q, N) row buffer even when causal
+    # (the pruned tail is masked, not skipped), so only flash — which
+    # never visits dead tiles — gets the VPU pruning win.
+    vpu_frac = frac if method == "flash" else 1.0
+    vpu = 6.0 * b_h * n_q * n_kv * vpu_frac / VPU_FLOPS
     # HBM traffic: Q/O once; K/V per Q block unless resident
     qo = 2 * b_h * n_q * e * itemsize
     if method == "mas_resident":
-        kv = 2 * b_h * n_kv * e * itemsize
-    else:  # streamed / flash: K/V re-fetched for every Q row block
-        kv = 2 * b_h * n_kv * e * itemsize * max(1, n_q // blk_q)
+        kv = 2 * b_h * n_kv * e * itemsize  # pinned once: no pruning win
+    else:
+        # streamed / flash: K/V re-fetched per Q row block, but a causal
+        # block only fetches its intersecting tiles (clamped index maps).
+        kv = 2 * b_h * n_kv * e * itemsize * -(-n_q // blk_q) * frac
     hbm = (qo + kv) / HBM_BW
     return mxu, hbm, vpu
 
 
 def tune_attention(*, b_h: int, n_q: int, n_kv: int, e: int,
                    itemsize: int = 2,
-                   vmem_budget: int = DEFAULT_VMEM_BUDGET) -> KernelChoice:
+                   vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                   causal: bool = False) -> KernelChoice:
     """Grid search over MXU-aligned block shapes; Mosaic overlaps the
     MXU/VPU/DMA streams, so cost = max of the three + ramp."""
     best: KernelChoice | None = None
@@ -70,11 +99,11 @@ def tune_attention(*, b_h: int, n_q: int, n_kv: int, e: int,
             d = choose_attention_method(
                 n_kv=n_kv, e=e, itemsize=itemsize,
                 tiling=TilingConfig(blk_q, blk_kv, True),
-                vmem_budget=vmem_budget,
+                vmem_budget=vmem_budget, causal=causal,
             )
             mxu, hbm, vpu = _score(
                 d.method, d.tiling.blk_q, blk_kv, b_h=b_h, n_q=n_q,
-                n_kv=n_kv, e=e, itemsize=itemsize,
+                n_kv=n_kv, e=e, itemsize=itemsize, causal=d.causal,
             )
             # pipeline ramp: one DMA of a K/V tile + one MXU tile pass
             ramp = (2 * blk_kv * e * itemsize) / HBM_BW

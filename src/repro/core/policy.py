@@ -50,6 +50,10 @@ class PolicyDecision:
     tiling: TilingConfig
     vmem_bytes: int
     reason: str
+    # Causal workloads prune fully-masked KV tiles in every kernel variant
+    # (DESIGN.md §3); the decision carries the flag so downstream cost
+    # models (autotune._score) charge the pruned workload, not the dense one.
+    causal: bool = False
 
 
 def _bytes(n_elems: int, itemsize: int) -> int:
@@ -88,11 +92,15 @@ def choose_attention_method(
     tiling: TilingConfig | None = None,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     prefer: str = "auto",
+    causal: bool = False,
 ) -> PolicyDecision:
     """Pick the kernel variant for a given attention workload.
 
     ``prefer`` forces a method ("mas", "flash") or "auto" applies the
     paper-ordered policy: resident -> streamed (overwrite) -> flash.
+    ``causal`` does not change feasibility (the row buffer still spans the
+    full N) but is threaded into the decision so cost models charge the
+    pruned tile set.
     """
     t = tiling or TilingConfig()
     blk_kv = min(t.blk_kv, n_kv)
@@ -102,7 +110,7 @@ def choose_attention_method(
         return PolicyDecision(
             "flash", TilingConfig(blk_q, blk_kv, False),
             flash_vmem_bytes(blk_q, blk_kv, e, itemsize),
-            "forced flash",
+            "forced flash", causal,
         )
 
     resident = mas_vmem_bytes(blk_q, blk_kv, n_kv, e, itemsize, True)
@@ -110,6 +118,7 @@ def choose_attention_method(
         return PolicyDecision(
             "mas_resident", TilingConfig(blk_q, blk_kv, True), resident,
             f"K/V ({2 * n_kv * e * itemsize} B) + row buffer fit VMEM",
+            causal,
         )
 
     streamed = mas_vmem_bytes(blk_q, blk_kv, n_kv, e, itemsize, False)
@@ -117,6 +126,7 @@ def choose_attention_method(
         return PolicyDecision(
             "mas_streamed", TilingConfig(blk_q, blk_kv, False), streamed,
             "K/V evicted per tile (proactive overwrite); row buffer fits",
+            causal,
         )
 
     # Shrink blk_q before giving up on the paper's dataflow — the paper
@@ -128,7 +138,7 @@ def choose_attention_method(
         if streamed <= vmem_budget:
             return PolicyDecision(
                 "mas_streamed", TilingConfig(bq, blk_kv, False), streamed,
-                f"row buffer fits after shrinking blk_q to {bq}",
+                f"row buffer fits after shrinking blk_q to {bq}", causal,
             )
 
     if prefer == "mas":
@@ -140,4 +150,5 @@ def choose_attention_method(
         "flash", TilingConfig(blk_q, blk_kv, False),
         flash_vmem_bytes(blk_q, blk_kv, e, itemsize),
         "paper dataflow infeasible at this N (§5.6) — online softmax",
+        causal,
     )

@@ -24,6 +24,11 @@ from jax.sharding import PartitionSpec as P
 
 _state = threading.local()
 
+# pvary marks a value as device-varying inside shard_map (jax >= 0.6
+# varying-ness types); on older jax there is no varying-ness tracking
+# and identity is correct. Shared by the shard_map-based collectives.
+pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
 
 def _axes() -> dict[str, int] | None:
     return getattr(_state, "axes", None)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.ctx import pvary as _pvary
+
 
 def pipelined_apply(params_stacked, x, body_fn, mesh: Mesh, *,
                     axis: str = "stage", num_microbatches: int):
@@ -51,13 +53,13 @@ def pipelined_apply(params_stacked, x, body_fn, mesh: Mesh, *,
     def run(p_local, xs):
         stage = jax.lax.axis_index(axis)
         # mark carries device-varying up front so loop types stay stable
-        buf = jax.lax.pvary(jnp.zeros_like(xs[0]), (axis,))
-        outs = jax.lax.pvary(jnp.zeros_like(xs), (axis,))
+        buf = _pvary(jnp.zeros_like(xs[0]), (axis,))
+        outs = _pvary(jnp.zeros_like(xs), (axis,))
         perm = [(i, (i + 1) % s) for i in range(s)]
 
         def tick(t, carry):
             buf, outs = carry
-            inp = jax.lax.pvary(xs[jnp.clip(t, 0, m - 1)], (axis,))
+            inp = _pvary(xs[jnp.clip(t, 0, m - 1)], (axis,))
             buf = jnp.where(stage == 0, inp, buf)
             y = run_local_layers(p_local, buf)
             out_idx = t - (s - 1)

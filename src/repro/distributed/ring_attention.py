@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.ctx import pvary as _pvary
+
 NEG_INF = -1e30
 
 
@@ -72,7 +74,7 @@ def ring_attention(q, k, v, mesh: Mesh, *, axis: str = "model",
 
         # freshly-created zeros are device-invariant; mark them varying
         # so the fori_loop carry types stay stable (inputs already vary)
-        m0, l0, a0 = (jax.lax.pvary(x, (axis,)) for x in (m0, l0, a0))
+        m0, l0, a0 = (_pvary(x, (axis,)) for x in (m0, l0, a0))
         init = (k_loc, v_loc, m0, l0, a0)
         _, _, m, l, acc = jax.lax.fori_loop(0, n_shards, hop, init)
         l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows

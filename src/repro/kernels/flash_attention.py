@@ -58,16 +58,33 @@ def _flash_kernel(
             preferred_element_type=jnp.float32,
         ) * sm_scale
         if causal or window is not None or kv_len is not None:
-            rows = jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 0) + row0
-            cols = jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 1) + col0
-            mask = jnp.ones((blk_q, blk_kv), dtype=bool)
+            # Interior tiles (strictly below the diagonal, inside the
+            # window, below kv_len) skip the mask computation entirely.
+            need_mask = False
             if causal or window is not None:
-                mask = cols <= rows
+                need_mask = col0 + blk_kv - 1 > row0
             if window is not None:
-                mask = jnp.logical_and(mask, cols > rows - window)
+                need_mask = jnp.logical_or(
+                    need_mask, col0 <= row0 + blk_q - 1 - window
+                )
             if kv_len is not None:
-                mask = jnp.logical_and(mask, cols < kv_len)
-            s = jnp.where(mask, s, NEG_INF)
+                need_mask = jnp.logical_or(need_mask, col0 + blk_kv > kv_len)
+
+            def _masked(s):
+                rows = jax.lax.broadcasted_iota(
+                    jnp.int32, (blk_q, blk_kv), 0) + row0
+                cols = jax.lax.broadcasted_iota(
+                    jnp.int32, (blk_q, blk_kv), 1) + col0
+                mask = jnp.ones((blk_q, blk_kv), dtype=bool)
+                if causal or window is not None:
+                    mask = cols <= rows
+                if window is not None:
+                    mask = jnp.logical_and(mask, cols > rows - window)
+                if kv_len is not None:
+                    mask = jnp.logical_and(mask, cols < kv_len)
+                return jnp.where(mask, s, NEG_INF)
+
+            s = jax.lax.cond(need_mask, _masked, lambda s: s, s)
 
         m_prev = m_ref[...]
         m_cur = jnp.max(s, axis=1, keepdims=True)
@@ -120,10 +137,25 @@ def flash_attention_flat(
         causal=causal, window=window, q_offset=q_offset, kv_len=kv_len,
     )
     grid = (bhq, n_q_blocks, n_kv_blocks)
+    last = n_kv_blocks - 1
+
+    def _kv_index(bh, iq, j):
+        # Clamp the block index into the live causal/window band so the
+        # pipeline never DMAs a tile the kernel will skip.
+        if causal or window is not None:
+            row0 = iq * blk_q + q_offset
+            j = jnp.minimum(j, jnp.minimum((row0 + blk_q - 1) // blk_kv, last))
+            if window is not None:
+                # lower clamp must stay in range too: windowed Q rows
+                # (incl. blk_q padding) may extend past the KV length
+                jmin = jnp.maximum((row0 - window + 1) // blk_kv, 0)
+                j = jnp.maximum(j, jnp.minimum(jmin, last))
+        return (bh // group, j, 0)
+
     in_specs = [
         pl.BlockSpec((1, blk_q, e), lambda bh, iq, j: (bh, iq, 0)),
-        pl.BlockSpec((1, blk_kv, e), lambda bh, iq, j: (bh // group, j, 0)),
-        pl.BlockSpec((1, blk_kv, e), lambda bh, iq, j: (bh // group, j, 0)),
+        pl.BlockSpec((1, blk_kv, e), _kv_index),
+        pl.BlockSpec((1, blk_kv, e), _kv_index),
     ]
     o_spec = pl.BlockSpec((1, blk_q, e), lambda bh, iq, j: (bh, iq, 0))
     scratch = [

@@ -21,6 +21,12 @@ Two variants realize the §4.3 proactive-overwrite policy:
   from HBM for the PV pass (the "evict the reloadable operand, reload,
   redo" policy, expressed as dataflow; DRAM-read inflation matches §5.4.2).
 
+Causal prefill prunes fully-masked KV tiles in both variants (DESIGN.md
+§3): the resident loops stop at the last tile intersecting the Q row
+block, the streamed grid skips compute AND clamps its index maps so dead
+steps issue no DMA, and only diagonal-straddling tiles pay for the
+in-tile mask.
+
 Inputs are pre-flattened to (B*H, N, E) by ops.py.
 """
 
@@ -42,6 +48,20 @@ def _causal_tile_mask(blk_q: int, blk_kv: int, row0, col0):
     return cols <= rows
 
 
+def _causal_tile_bounds(iq, blk_q: int, blk_kv: int, nkv: int):
+    """(n_full, n_needed) KV-tile counts for Q row block ``iq``.
+
+    Tiles [0, n_full) lie strictly below the causal diagonal (every
+    element visible — no in-tile mask needed); tiles [n_full, n_needed)
+    straddle the diagonal (in-tile mask); tiles [n_needed, nkv) are fully
+    masked and are never computed, fetched, or accumulated (DESIGN.md §3).
+    """
+    row0 = iq * blk_q
+    n_full = jnp.minimum((row0 + 1) // blk_kv, nkv)
+    n_needed = jnp.minimum((row0 + blk_q - 1) // blk_kv + 1, nkv)
+    return n_full, n_needed
+
+
 # ---------------------------------------------------------------------------
 # Variant 1: K/V resident in VMEM (paper's ideal regime)
 # ---------------------------------------------------------------------------
@@ -55,15 +75,19 @@ def _mas_resident_kernel(
     q = q_ref[0].astype(jnp.float32)  # (blk_q, E)
     n = k_ref.shape[1]
     nkv = n // blk_kv
+    if causal:
+        n_full, n_needed = _causal_tile_bounds(iq, blk_q, blk_kv, nkv)
+    else:
+        n_full = n_needed = nkv
 
     # ---- Alg. 2: MAC stream, S tiles into the full on-chip row buffer ----
-    def s_body(j, _):
+    def s_body(j, masked):
         k_tile = k_ref[0, pl.ds(j * blk_kv, blk_kv), :].astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k_tile, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         ) * sm_scale
-        if causal:
+        if masked:  # only diagonal-straddling tiles pay for the mask
             m = _causal_tile_mask(blk_q, blk_kv, iq * blk_q, j * blk_kv)
             s = jnp.where(m, s, NEG_INF)
         if kv_len is not None:
@@ -71,12 +95,20 @@ def _mas_resident_kernel(
                 jnp.int32, (blk_q, blk_kv), 1) + j * blk_kv
             s = jnp.where(cols < kv_len, s, NEG_INF)
         s_ref[:, pl.ds(j * blk_kv, blk_kv)] = s
-        return 0
 
-    jax.lax.fori_loop(0, nkv, s_body, 0, unroll=False)
+    jax.lax.fori_loop(0, n_full, lambda j, c: (s_body(j, False), c)[1], 0)
+    if causal:
+        jax.lax.fori_loop(
+            n_full, n_needed, lambda j, c: (s_body(j, True), c)[1], 0
+        )
 
     # ---- Alg. 3: VEC stream, row-granularity softmax (exact, one pass) ----
     s = s_ref[...]
+    if causal:
+        # Tiles beyond n_needed were never written: mask the stale tail so
+        # the row max/sum only see live columns (exactness invariant).
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < n_needed * blk_kv, s, NEG_INF)
     m = jnp.max(s, axis=1, keepdims=True)
     p = jnp.exp(s - m)
     l = jnp.sum(p, axis=1, keepdims=True)
@@ -93,7 +125,7 @@ def _mas_resident_kernel(
 
     e = q_ref.shape[2]
     acc = jax.lax.fori_loop(
-        0, nkv, o_body, jnp.zeros((blk_q, e), jnp.float32), unroll=False
+        0, n_needed, o_body, jnp.zeros((blk_q, e), jnp.float32)
     )
     o_ref[0] = acc.astype(o_ref.dtype)
 
@@ -109,8 +141,15 @@ def _mas_streamed_kernel(
 ):
     iq = pl.program_id(1)
     j = pl.program_id(2)
+    if causal:
+        n_full, n_needed = _causal_tile_bounds(iq, blk_q, blk_kv, nkv)
+    else:
+        n_full = n_needed = nkv
 
-    @pl.when(j < nkv)
+    # Dead grid steps (j in [n_needed, nkv) and the mirrored PV range) do
+    # no compute; the index maps in mas_attention_flat clamp the K/V block
+    # index there so no DMA is issued for fully-masked tiles either.
+    @pl.when(jnp.logical_and(j < nkv, j < n_needed))
     def _s_pass():
         # MAC stream: this K tile overwrites the previous one in VMEM.
         q = q_ref[0].astype(jnp.float32)
@@ -120,8 +159,13 @@ def _mas_streamed_kernel(
             preferred_element_type=jnp.float32,
         ) * sm_scale
         if causal:
-            m = _causal_tile_mask(blk_q, blk_kv, iq * blk_q, j * blk_kv)
-            s = jnp.where(m, s, NEG_INF)
+            # Only diagonal-straddling tiles (j >= n_full) pay for the
+            # in-tile mask; strictly-below-diagonal tiles skip it.
+            def _mask(x):
+                m = _causal_tile_mask(blk_q, blk_kv, iq * blk_q, j * blk_kv)
+                return jnp.where(m, x, NEG_INF)
+
+            s = jax.lax.cond(j >= n_full, _mask, lambda x: x, s)
         if kv_len is not None:
             cols = jax.lax.broadcasted_iota(
                 jnp.int32, (blk_q, blk_kv), 1) + j * blk_kv
@@ -132,16 +176,20 @@ def _mas_streamed_kernel(
     def _softmax():
         # VEC stream: full-row softmax once all S tiles landed.
         s = s_ref[...]
+        if causal:
+            # Fully-masked tiles were never written: mask the stale tail.
+            cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols < n_needed * blk_kv, s, NEG_INF)
         m = jnp.max(s, axis=1, keepdims=True)
         p = jnp.exp(s - m)
         l = jnp.sum(p, axis=1, keepdims=True)
         s_ref[...] = p / l
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(j >= nkv)
+    @pl.when(jnp.logical_and(j >= nkv, j - nkv < n_needed))
     def _pv_pass():
         # MAC stream resumes: V tiles are RE-FETCHED from HBM (the reload
-        # after overwrite) and accumulated.
+        # after overwrite) and accumulated — only the intersecting ones.
         jj = j - nkv
         p_tile = s_ref[:, pl.ds(jj * blk_kv, blk_kv)]
         v_tile = v_ref[0].astype(jnp.float32)
@@ -209,15 +257,26 @@ def mas_attention_flat(
         )
         grid = (bhq, n_q_blocks, 2 * n_kv_blocks)
         last = n_kv_blocks - 1
+
+        def _last_needed(iq):
+            # Last KV tile intersecting Q row block iq. Clamping the block
+            # index here means dead grid steps revisit the same tile, so
+            # the pipeline issues no DMA for fully-masked tiles. Derived
+            # from _causal_tile_bounds so the clamp and the kernel's
+            # pl.when compute gate stay in lockstep.
+            if not causal:
+                return last
+            return _causal_tile_bounds(iq, blk_q, blk_kv, n_kv_blocks)[1] - 1
+
         kv_k_spec = pl.BlockSpec(
             (1, blk_kv, e),
-            lambda bh, iq, j: (bh // group, jnp.minimum(j, last), 0),
+            lambda bh, iq, j: (bh // group, jnp.minimum(j, _last_needed(iq)), 0),
         )
         kv_v_spec = pl.BlockSpec(
             (1, blk_kv, e),
             lambda bh, iq, j: (
                 bh // group,
-                jnp.clip(j - n_kv_blocks, 0, last),
+                jnp.clip(j - n_kv_blocks, 0, _last_needed(iq)),
                 0,
             ),
         )

@@ -82,6 +82,7 @@ def attention(
             tiling=TilingConfig(blk_q, blk_kv, True),
             vmem_budget=vmem_budget,
             prefer="mas" if method == "mas" else "auto",
+            causal=causal,
         )
         method = decision.method
         blk_q, blk_kv = decision.tiling.blk_q, decision.tiling.blk_kv

@@ -73,9 +73,12 @@ class ServingEngine:
         done = np.array([r.max_new_tokens == 0 for r in reqs])
         token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         for step in range(max_new):
+            # One device->host transfer per step; per-row int() on the
+            # device array would sync the stream once per request.
+            token_host = np.asarray(token)
             for i, r in enumerate(reqs):
                 if r.rid >= 0 and not done[i]:
-                    t = int(token[i, 0])
+                    t = int(token_host[i, 0])
                     out[r.rid].append(t)
                     if t == r.eos_id or len(out[r.rid]) >= r.max_new_tokens:
                         done[i] = True

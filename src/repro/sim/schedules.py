@@ -76,15 +76,45 @@ class _Builder:
         return self._emit(unit="MAC", cycles=cyc, deps=tuple(deps), tag=tag,
                           mac_ops=ops, l1_bytes=l1)
 
-    def vec_softmax(self, deps, cols=None, rows=None, tag="P") -> int:
+    def vec_softmax(self, deps, cols=None, rows=None, tag="P",
+                    mask_elems=0) -> int:
         hh, nq = self.hh, self.nq
         n = self.w.seq if cols is None else cols
         r = hh * nq if rows is None else rows
         cyc = self.hw.vec_softmax_cycles(r, n)
         ops = self.hw.vec_ops_softmax(r, n)
+        if mask_elems:
+            # Partial-tile causal masking charged to the VEC stream: one
+            # compare+select pass over the diagonal-straddling tiles.
+            cyc += mask_elems / self.hw.vec_lanes * self.hw.vec_ew_cost
+            ops += mask_elems
         l1 = 2 * r * n * self.bpe
         return self._emit(unit="VEC", cycles=cyc, deps=tuple(deps), tag=tag,
                           vec_ops=ops, l1_bytes=l1)
+
+    # -- causal tile pruning (DESIGN.md §3) --
+    def tc_row(self, i: int) -> int:
+        """KV sub-tiles intersecting Q row block i (== tc when dense)."""
+        if not self.w.causal:
+            return self.tc
+        row_last = min((i + 1) * self.nq, self.w.seq) - 1
+        return min(self.tc, row_last // self.nkv + 1)
+
+    def cols_row(self, i: int) -> int:
+        """Live score-row width for row block i (tile-granular)."""
+        return min(self.w.seq, self.tc_row(i) * self.nkv)
+
+    def mask_elems_row(self, i: int) -> int:
+        """Score elements in diagonal-straddling tiles of row block i —
+        the tiles whose in-tile causal mask the VEC stream must apply."""
+        if not self.w.causal:
+            return 0
+        n_below = min(self.tc_row(i), (i * self.nq + 1) // self.nkv)
+        return (self.tc_row(i) - n_below) * self.hh * self.nq * self.nkv
+
+    def row_buf_row_b(self, i: int) -> int:
+        """Live bytes of the C/P row buffer for row block i."""
+        return self.hh * self.nq * self.cols_row(i) * self.bpe
 
     # -- tile byte sizes --
     @property
@@ -145,8 +175,10 @@ def build_mas(w, t, hw) -> list[Task] | None:
     o_last: dict[int, int] = {}   # row -> last O MAC task
     kv_loaded: dict[int, list[int]] = {}  # head tile -> K dma tasks
 
-    def load_kv(ht, which, resident_flag) -> list[int]:
+    def load_kv(ht, which, resident_flag, count) -> list[int]:
         if resident_flag:
+            # The pinned matrix is loaded whole once per head tile (the
+            # last causal row block needs every tile anyway).
             key = (ht, which)
             if key not in kv_loaded:
                 kv_loaded[key] = [
@@ -155,34 +187,38 @@ def build_mas(w, t, hw) -> list[Task] | None:
                 ]
             return kv_loaded[key]
         return [b.dma_in(b.kv_tile_b, tag=f"{which}{ht}.{j}")
-                for j in range(b.tc)]
+                for j in range(count)]
 
     def emit_c(r):
         ht, i = rows[r]
+        tc = b.tc_row(i)  # causal: only intersecting KV tiles
         qd = b.dma_in(b.q_tile_b, tag=f"Q{r}")
-        kds = load_kv(ht, "K", k_resident)
+        kds = load_kv(ht, "K", k_resident, tc)
         # Two row buffers: C_r reuses row r-2's buffer, freed by O_{r-2}.
         buf = [o_last[r - 2]] if r - 2 in o_last else []
         last = None
-        for j in range(b.tc):
+        for j in range(tc):
             last = b.mac_qk(deps=[qd, kds[j]] + buf, tag=f"C{r}.{j}")
         c_last[r] = last
 
     def emit_p(r):
-        p_task[r] = b.vec_softmax(deps=[c_last[r]], tag=f"P{r}")
+        _, i = rows[r]
+        p_task[r] = b.vec_softmax(deps=[c_last[r]], cols=b.cols_row(i),
+                                  mask_elems=b.mask_elems_row(i), tag=f"P{r}")
 
     def emit_o(r):
         ht, i = rows[r]
+        tc = b.tc_row(i)
         if overwrite:
             # §4.3: V was overwritten so P_r could finish — the MAC
             # stream stalls on the softmax, then V reloads from DRAM
-            # and the interrupted MatMul redoes its tiles.
+            # and the interrupted MatMul redoes its (live) tiles.
             vds = [b.dma_in(b.kv_tile_b, deps=[p_task[r]],
-                            tag=f"Vreload{r}.{j}") for j in range(b.tc)]
+                            tag=f"Vreload{r}.{j}") for j in range(tc)]
         else:
-            vds = load_kv(ht, "V", v_resident)
+            vds = load_kv(ht, "V", v_resident, tc)
         last = None
-        for j in range(b.tc):
+        for j in range(tc):
             last = b.mac_pv(deps=[p_task[r], vds[j]], tag=f"O{r}.{j}")
         o_last[r] = last
         b.dma_out(b.o_tile_b, deps=[last], tag=f"Oout{r}")
@@ -220,26 +256,28 @@ def build_flat(w, t, hw) -> list[Task] | None:
 
     kv_loaded: dict = {}
 
-    def load_kv(ht, which):
+    def load_kv(ht, which, count):
         if resident:
             key = (ht, which)
             if key not in kv_loaded:
                 kv_loaded[key] = [b.dma_in(b.kv_tile_b) for _ in range(b.tc)]
             return kv_loaded[key]
-        return [b.dma_in(b.kv_tile_b) for _ in range(b.tc)]
+        return [b.dma_in(b.kv_tile_b) for _ in range(count)]
 
     prev_o = None  # strict stage chain: C_{i+1} starts after O_i finishes
     for ht, i in _rows(b):
+        tc = b.tc_row(i)
         qd = b.dma_in(b.q_tile_b)
-        kds = load_kv(ht, "K")
+        kds = load_kv(ht, "K", tc)
         last = None
-        for j in range(b.tc):
+        for j in range(tc):
             deps = [qd, kds[j]] + ([prev_o] if prev_o is not None else [])
             last = b.mac_qk(deps=deps)
-        p = b.vec_softmax(deps=[last])
-        vds = load_kv(ht, "V")
+        p = b.vec_softmax(deps=[last], cols=b.cols_row(i),
+                          mask_elems=b.mask_elems_row(i))
+        vds = load_kv(ht, "V", tc)
         last_o = None
-        for j in range(b.tc):
+        for j in range(tc):
             last_o = b.mac_pv(deps=[p, vds[j]])
         prev_o = last_o
         b.dma_out(b.o_tile_b, deps=[last_o])
@@ -257,30 +295,31 @@ def build_layerwise(w, t, hw) -> list[Task] | None:
         return None
     barrier: list[int] = []
 
-    # Stage 1: C = QK^T, spill C to DRAM
+    # Stage 1: C = QK^T, spill C to DRAM (live causal columns only)
     stage: list[int] = []
     for ht, i in _rows(b):
         qd = b.dma_in(b.q_tile_b)
         last = None
-        for j in range(b.tc):
+        for j in range(b.tc_row(i)):
             kd = b.dma_in(b.kv_tile_b)
             last = b.mac_qk(deps=[qd, kd])
-        stage.append(b.dma_out(b.row_buf_b, deps=[last], tag="Cout"))
+        stage.append(b.dma_out(b.row_buf_row_b(i), deps=[last], tag="Cout"))
     barrier = stage
 
     # Stage 2: P = softmax(C), C from DRAM, P to DRAM
     stage = []
     for ht, i in _rows(b):
-        cd = b.dma_in(b.row_buf_b, deps=barrier, tag="Cin")
-        p = b.vec_softmax(deps=[cd])
-        stage.append(b.dma_out(b.row_buf_b, deps=[p], tag="Pout"))
+        cd = b.dma_in(b.row_buf_row_b(i), deps=barrier, tag="Cin")
+        p = b.vec_softmax(deps=[cd], cols=b.cols_row(i),
+                          mask_elems=b.mask_elems_row(i))
+        stage.append(b.dma_out(b.row_buf_row_b(i), deps=[p], tag="Pout"))
     barrier = stage
 
     # Stage 3: O = PV, P from DRAM
     for ht, i in _rows(b):
-        pd = b.dma_in(b.row_buf_b, deps=barrier, tag="Pin")
+        pd = b.dma_in(b.row_buf_row_b(i), deps=barrier, tag="Pin")
         last = None
-        for j in range(b.tc):
+        for j in range(b.tc_row(i)):
             vd = b.dma_in(b.kv_tile_b)
             last = b.mac_pv(deps=[pd, vd])
         b.dma_out(b.o_tile_b, deps=[last])
@@ -300,15 +339,16 @@ def build_softpipe(w, t, hw) -> list[Task] | None:
     for ht, i in _rows(b):
         qd = b.dma_in(b.q_tile_b)
         last = None
-        for j in range(b.tc):
+        for j in range(b.tc_row(i)):
             kd = b.dma_in(b.kv_tile_b)
             last = b.mac_qk(deps=[qd, kd])
-        p = b.vec_softmax(deps=[last])  # overlaps next row's C on MAC
-        pouts.append(b.dma_out(b.row_buf_b, deps=[p], tag="Pout"))
+        p = b.vec_softmax(deps=[last], cols=b.cols_row(i),
+                          mask_elems=b.mask_elems_row(i))
+        pouts.append(b.dma_out(b.row_buf_row_b(i), deps=[p], tag="Pout"))
     for ht, i in _rows(b):
-        pd = b.dma_in(b.row_buf_b, deps=pouts, tag="Pin")
+        pd = b.dma_in(b.row_buf_row_b(i), deps=pouts, tag="Pin")
         last = None
-        for j in range(b.tc):
+        for j in range(b.tc_row(i)):
             vd = b.dma_in(b.kv_tile_b)
             last = b.mac_pv(deps=[pd, vd])
         b.dma_out(b.o_tile_b, deps=[last])
@@ -351,7 +391,11 @@ def build_tileflow(w, t, hw) -> list[Task] | None:
         c_last[r] = b.mac_qk(deps=deps)
 
     def emit_p(r):
-        p_task[r] = b.vec_softmax(deps=[c_last[r]])
+        # No K/V sub-tile tier: the single row-wide tile always straddles
+        # the diagonal, so causal workloads mask the WHOLE row (no pruning
+        # available — exactly the tier MAS adds).
+        full_row = b.hh * b.nq * b.w.seq if w.causal else 0
+        p_task[r] = b.vec_softmax(deps=[c_last[r]], mask_elems=full_row)
 
     def emit_o(r):
         ht, _ = rows[r]
@@ -400,13 +444,17 @@ def build_fusemax(w, t, hw) -> list[Task] | None:
                 kv_loaded[key] = [b.dma_in(b.kv_tile_b) for _ in range(b.tc)]
             return kv_loaded[key][j]
         return b.dma_in(b.kv_tile_b)
-    def vec_partial(c_dep, i, j):
+    def vec_partial(c_dep, i, j, masked):
         # partial softmax on the tile + running (m, l) + acc rescale
         r = b.hh * b.nq
         cyc = FUSEMAX_VEC_PASSES * hw.vec_softmax_cycles(r, b.nkv) + r * (
             2 * hw.vec_ew_cost + w.emb / hw.vec_lanes * 2
         )
         ops = hw.vec_ops_softmax(r, b.nkv) + 2 * r * w.emb
+        if masked:
+            # diagonal-straddling tile: one causal compare+select pass
+            cyc += r * b.nkv / hw.vec_lanes * hw.vec_ew_cost
+            ops += r * b.nkv
         return b._emit(unit="VEC", cycles=cyc, deps=(c_dep,),
                        tag=f"p{i}.{j}", vec_ops=ops,
                        l1_bytes=2 * r * b.nkv * b.bpe)
@@ -414,13 +462,18 @@ def build_fusemax(w, t, hw) -> list[Task] | None:
     for ht, i in _rows(b):
         # Software-pipelined einsum cascade: the MAC queue runs
         # S_{j+1} ahead of A_j so the VEC partial-softmax overlaps.
+        # Causal: only tiles intersecting the diagonal are emitted.
+        tc = b.tc_row(i)
+        n_below = (i * b.nq + 1) // b.nkv  # strictly-below tiles: no mask
         qd = b.dma_in(b.q_tile_b)
         s_tasks, p_tasks = [], []
 
         def emit_s(j):
             kd = load_kv(ht, "K", j)
             s_tasks.append(b.mac_qk(deps=[qd, kd], tag=f"S{i}.{j}"))
-            p_tasks.append(vec_partial(s_tasks[-1], i, j))
+            p_tasks.append(
+                vec_partial(s_tasks[-1], i, j, w.causal and j >= n_below)
+            )
 
         prev_acc = None
 
@@ -433,10 +486,10 @@ def build_fusemax(w, t, hw) -> list[Task] | None:
             prev_acc = b.mac_pv(deps=deps, tag=f"A{i}.{j}")
 
         emit_s(0)
-        for j in range(1, b.tc):
+        for j in range(1, tc):
             emit_s(j)
             emit_a(j - 1)
-        emit_a(b.tc - 1)
+        emit_a(tc - 1)
         b.dma_out(b.o_tile_b, deps=[prev_acc])
     return b.tasks
 

@@ -195,6 +195,6 @@ def search_tiling(method: str, w: AttentionWorkload, hw: HWConfig,
         t = fusemax_tiling(w)
         tasks = build_schedule(method, w, t, hw)
         assert tasks is not None
-        return SearchResult(method, t, simulate(tasks, hw), 1,
-                            [(1, simulate(tasks, hw).cycles)])
+        r = simulate(tasks, hw)
+        return SearchResult(method, t, r, 1, [(1, r.cycles)])
     return _STRATEGIES[strategy](method, w, hw, **kw)

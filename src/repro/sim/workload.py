@@ -12,15 +12,26 @@ class AttentionWorkload:
     seq: int
     emb: int  # per-head embedding (Emb_{K,V} column of Table 1)
     batch: int = 1
+    # Causal prefill: the score grid is lower-triangular and schedule
+    # builders only emit tiles that intersect the diagonal or sit below it
+    # (DESIGN.md §3). Table 1 workloads are bidirectional (False).
+    causal: bool = False
+
+    @property
+    def _score_elems(self) -> int:
+        """Useful score-matrix elements per (batch, head)."""
+        if self.causal:
+            return self.seq * (self.seq + 1) // 2
+        return self.seq * self.seq
 
     @property
     def mac_ops(self) -> int:
-        """Total MACs: QK^T + PV."""
-        return 2 * self.batch * self.heads * self.seq * self.seq * self.emb
+        """Useful MACs: QK^T + PV (lower bound — tile padding adds more)."""
+        return 2 * self.batch * self.heads * self._score_elems * self.emb
 
     @property
     def softmax_elems(self) -> int:
-        return self.batch * self.heads * self.seq * self.seq
+        return self.batch * self.heads * self._score_elems
 
     def qkv_bytes(self, bpe: int) -> int:
         return 3 * self.batch * self.heads * self.seq * self.emb * bpe
@@ -29,8 +40,8 @@ class AttentionWorkload:
         return self.batch * self.heads * self.seq * self.emb * bpe
 
     def score_bytes(self, bpe: int) -> int:
-        """One full C or P matrix."""
-        return self.batch * self.heads * self.seq * self.seq * bpe
+        """One full C or P matrix (live entries only when causal)."""
+        return self.batch * self.heads * self._score_elems * bpe
 
 
 # Table 1: Network Configuration and Hyper-Parameters.

@@ -1,0 +1,151 @@
+"""Causal tile pruning: kernel parity + simulator/tuner work reduction.
+
+The pruned kernels (DESIGN.md §3) must stay bit-faithful to the dense
+masked path — pruning removes tiles whose softmax weight is exactly
+zero, so outputs match ``ref.attention`` to the dense tolerances — while
+the cost models (autotune._score, sim schedules) must actually charge
+less work for causal prefill.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import _causal_fraction, _score, tune_attention
+from repro.core.policy import choose_attention_method
+from repro.kernels import ref
+from repro.kernels.ops import attention
+from repro.sim import EDGE_HW, simulate
+from repro.sim.schedules import METHODS, Tiling, build_schedule
+from repro.sim.workload import AttentionWorkload
+
+KERNELS = ["mas_resident", "mas_streamed", "flash"]
+
+# Shapes chosen to stress the pruning bounds: GQA grouping, ragged
+# (non-block-multiple) lengths that exercise the padded kv_len mask on
+# top of the causal mask, nq != nkv (begin-aligned causal), and a blk_kv
+# larger than several Q blocks (whole-tile skips).
+CAUSAL_SHAPES = [
+    # (b, hq, hkv, nq, nkv, e)
+    (1, 1, 1, 256, 256, 64),     # square, multiple Q blocks per KV tile
+    (2, 4, 2, 128, 128, 64),     # GQA 2:1
+    (1, 8, 1, 64, 512, 64),      # MQA, nkv >> nq: most KV tiles dead
+    (1, 2, 2, 192, 96, 32),      # nq > nkv
+    (2, 3, 3, 200, 300, 80),     # ragged: padding + kv_len + causal
+    (1, 2, 2, 100, 100, 64),     # non-multiple square
+]
+
+
+@pytest.mark.parametrize("method", KERNELS)
+@pytest.mark.parametrize("shape", CAUSAL_SHAPES,
+                         ids=[str(s) for s in CAUSAL_SHAPES])
+def test_pruned_causal_kernels_match_ref(method, shape):
+    b, hq, hkv, nq, nkv, e = shape
+    rng = np.random.default_rng([*shape, len(method)])  # reproducible
+    q = jnp.asarray(rng.standard_normal((b, hq, nq, e)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, nkv, e)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, nkv, e)), jnp.float32)
+    out = attention(q, k, v, method=method, causal=True,
+                    blk_q=64, blk_kv=128)
+    expect = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("blk_q,blk_kv", [(8, 128), (32, 256), (128, 128)])
+def test_causal_parity_invariant_to_tiling(blk_q, blk_kv):
+    """Pruning bounds must be correct for every (N_Q, N_KV) choice."""
+    rng = np.random.default_rng(blk_q * 7 + blk_kv)
+    q = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    expect = ref.attention(q, k, v, causal=True)
+    for method in KERNELS:
+        out = attention(q, k, v, method=method, causal=True,
+                        blk_q=blk_q, blk_kv=blk_kv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=3e-5, rtol=3e-5,
+                                   err_msg=f"{method} {blk_q}x{blk_kv}")
+
+
+def test_causal_schedules_emit_fewer_mac_tasks():
+    """For tr > 1 the causal builders must prune whole tiles, not just
+    mask them (tileflow excepted: it has no KV sub-tile tier to prune)."""
+    dense = AttentionWorkload("p", heads=8, seq=512, emb=64)
+    causal = dataclasses.replace(dense, causal=True)
+    t = Tiling(hh=1, nq=64, nkv=128)  # tr=8, tc=4
+    for method in METHODS:
+        td = build_schedule(method, dense, t, EDGE_HW)
+        tc = build_schedule(method, causal, t, EDGE_HW)
+        assert td is not None and tc is not None, method
+        n_dense = sum(1 for x in td if x.unit == "MAC")
+        n_causal = sum(1 for x in tc if x.unit == "MAC")
+        if method == "tileflow":
+            assert n_causal == n_dense, method
+        else:
+            assert n_causal < n_dense, (method, n_causal, n_dense)
+
+
+def test_causal_sim_work_roughly_halves():
+    """At tr >= 8 the causal MAC workload is ~(1 + 1/tr)/2 of dense and
+    the simulated makespan shrinks; useful-MAC lower bound still holds."""
+    dense = AttentionWorkload("p", heads=8, seq=512, emb=64)
+    causal = dataclasses.replace(dense, causal=True)
+    t = Tiling(hh=1, nq=64, nkv=64)  # tr=8, tile-exact diagonal
+    rd = simulate(build_schedule("mas", dense, t, EDGE_HW), EDGE_HW)
+    rc = simulate(build_schedule("mas", causal, t, EDGE_HW), EDGE_HW)
+    tr = 512 // 64
+    expect_frac = (1 + 1 / tr) / 2
+    assert rc.mac_ops == pytest.approx(rd.mac_ops * expect_frac, rel=1e-6)
+    assert rc.mac_ops >= causal.mac_ops  # tile padding never undercounts
+    assert rc.cycles < rd.cycles * 0.75
+    assert rc.dram_read_bytes <= rd.dram_read_bytes
+
+
+def test_causal_fraction_is_tile_granular():
+    # square prefill at tile granularity: (1 + 1/n_kv_tiles)/2
+    assert _causal_fraction(4096, 4096, 128, 512) == pytest.approx(0.5625)
+    assert _causal_fraction(4096, 4096, 128, 128) == pytest.approx(0.515625)
+    # n_kv >> n_q: roughly (n_q + blk_q) / (2 n_kv), tile-rounded up
+    assert _causal_fraction(512, 8192, 128, 128) == pytest.approx(0.0390625)
+    # n_q >> n_kv: late rows see every key, early rows still prune
+    f = _causal_fraction(8192, 512, 128, 128)
+    assert 0.9 < f < 1.0
+    # coarser blk_kv must never report less work than finer
+    assert (_causal_fraction(2048, 2048, 64, 512)
+            > _causal_fraction(2048, 2048, 64, 128))
+
+
+def test_autotune_score_charges_causal_fraction():
+    kw = dict(b_h=8, n_q=4096, n_kv=4096, e=128, itemsize=2)
+    mxu_d, hbm_d, vpu_d = _score("mas_streamed", 128, 512, **kw)
+    mxu_c, hbm_c, vpu_c = _score("mas_streamed", 128, 512, causal=True, **kw)
+    frac = _causal_fraction(4096, 4096, 128, 512)  # 0.5625
+    assert mxu_c == pytest.approx(mxu_d * frac)
+    # MAS normalizes the full row buffer even when causal (tail is
+    # masked, not skipped): VPU cost must NOT be pruned for mas_*.
+    assert vpu_c == pytest.approx(vpu_d)
+    assert hbm_c < hbm_d  # pruned K/V re-fetch traffic
+    # flash never visits dead tiles: its VPU passes do shrink
+    _, _, vpu_d = _score("flash", 128, 512, **kw)
+    _, _, vpu_c = _score("flash", 128, 512, causal=True, **kw)
+    assert vpu_c == pytest.approx(vpu_d * frac)
+    # resident K/V is pinned once: no fetch pruning, compute still halves
+    mxu_d, hbm_d, _ = _score("mas_resident", 128, 512, **kw)
+    mxu_c, hbm_c, _ = _score("mas_resident", 128, 512, causal=True, **kw)
+    assert mxu_c == pytest.approx(mxu_d * frac)
+    assert hbm_c == pytest.approx(hbm_d)
+
+
+def test_policy_threads_causal_to_decision():
+    d = choose_attention_method(n_kv=2048, e=128, itemsize=2, causal=True)
+    assert d.method == "mas_resident" and d.causal
+    assert not choose_attention_method(n_kv=2048, e=128, itemsize=2).causal
+
+
+def test_tuner_estimates_causal_faster():
+    kw = dict(b_h=16, n_q=8192, n_kv=8192, e=128)
+    assert (tune_attention(causal=True, **kw).est_seconds
+            < tune_attention(**kw).est_seconds)
