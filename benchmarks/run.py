@@ -30,6 +30,8 @@ def main() -> None:
     causal_prefill.main(emit)
     from benchmarks import seq_limit
     seq_limit.main(emit)
+    from benchmarks import serving_throughput
+    serving_throughput.main(emit)
     from benchmarks import kernel_bench
     kernel_bench.main(emit)
     print(f"# {len(lines)} benchmark rows", file=sys.stderr)

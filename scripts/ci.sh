@@ -7,7 +7,14 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Fast-fail signal on the paged serving subsystem before the full suite.
+python -m pytest -x -q tests/test_paged_cache.py
+
 python -m pytest -x -q
+
+# Serving smoke: dense-wave vs paged-continuous on a mixed-length
+# request set (asserts output equivalence, writes BENCH_serving.json).
+python benchmarks/serving_throughput.py --smoke
 
 python - <<'PY'
 import numpy as np

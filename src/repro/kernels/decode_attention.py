@@ -85,14 +85,23 @@ def decode_attention_flat(
     kernel = functools.partial(
         _decode_kernel, blk_kv=blk_kv, n_kv_blocks=n_kv_blocks, sm_scale=scale
     )
+
+    def kv_index(bh_, j, kvlen_ref):
+        # Tiles past kv_len are skipped by `pl.when` in the body, but an
+        # unclamped index map would still DMA them. Clamp to the last
+        # live tile so dead steps revisit the same block and the grid
+        # pipeline issues no copy (DESIGN.md §3 flash/MAS treatment).
+        last = jnp.maximum(kvlen_ref[0] - 1, 0) // blk_kv
+        return (bh_, jnp.minimum(j, last), 0)
+
     grid = (bh, n_kv_blocks)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, g, e), lambda bh_, j, *_: (bh_, 0, 0)),
-            pl.BlockSpec((1, blk_kv, e), lambda bh_, j, *_: (bh_, j, 0)),
-            pl.BlockSpec((1, blk_kv, e), lambda bh_, j, *_: (bh_, j, 0)),
+            pl.BlockSpec((1, blk_kv, e), kv_index),
+            pl.BlockSpec((1, blk_kv, e), kv_index),
         ],
         out_specs=pl.BlockSpec((1, g, e), lambda bh_, j, *_: (bh_, 0, 0)),
         scratch_shapes=[

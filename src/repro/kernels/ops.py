@@ -21,6 +21,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_flat
 from repro.kernels.flash_attention import flash_attention_flat
 from repro.kernels.mas_attention import mas_attention_flat
+from repro.kernels.paged_decode_attention import paged_decode_attention_flat
 
 
 def _default_interpret(interpret: bool | None) -> bool:
@@ -160,3 +161,36 @@ def decode_attention(
         qg, kf, vf, kv_len, blk_kv=blk, sm_scale=sm_scale, interpret=interp
     )
     return of[:, :group].reshape(b, hq, e)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,           # (B, Hq, E)
+    k_pages: jax.Array,     # (Hkv, P, page, E) — global page pool
+    v_pages: jax.Array,     # (Hkv, P, page, E)
+    page_table: jax.Array,  # (B, max_pages) int32
+    kv_lens: jax.Array,     # (B,) int32
+    *,
+    sm_scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-token decode against a block-table paged KV cache."""
+    b, hq, e = q.shape
+    hkv, _, page_size, _ = k_pages.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    interp = _default_interpret(interpret)
+
+    sub = _sublane_multiple(q.dtype)
+    assert page_size % sub == 0, (
+        f"page_size {page_size} must be a multiple of the {sub}-row "
+        f"sublane tile for {q.dtype}"
+    )
+    g_pad = max(group, sub)
+    qg = _pad_to(q.reshape(b, hkv, group, e), 2, g_pad)
+
+    of = paged_decode_attention_flat(
+        qg, k_pages, v_pages, page_table, kv_lens,
+        sm_scale=sm_scale, interpret=interp,
+    )
+    return of[:, :, :group].reshape(b, hq, e)

@@ -19,7 +19,10 @@ class Model:
     forward: Callable[..., Any]       # full-sequence -> (logits, aux)
     prefill: Callable[..., Any]       # -> (last_logits, cache)
     decode_step: Callable[..., Any]   # -> (logits, cache)
-    make_cache: Callable[..., Any]
+    make_cache: Callable[..., Any]    # cache_layout={"dense","paged"}
+    # paged-KV serving path (block-table cache; continuous batching):
+    paged_decode_step: Callable[..., Any] | None = None
+    write_prefill_pages: Callable[..., Any] | None = None
     encode: Callable[..., Any] | None = None
 
     def loss_fn(self, params, batch):
@@ -55,15 +58,25 @@ class Model:
 
 
 def build_model(cfg: ArchConfig) -> Model:
+    def make_cache(batch, max_len, mem_len=0, *, cache_layout="dense",
+                   page_size=16, num_pages=None):
+        if cache_layout == "paged":
+            if num_pages is None:
+                # one scratch page (id 0) + full residency for the batch
+                num_pages = batch * -(-max_len // page_size) + 1
+            return tfm.make_paged_cache(cfg, num_pages, page_size)
+        return tfm.make_cache(cfg, batch, max_len, mem_len=mem_len)
+
     return Model(
         cfg=cfg,
         init=lambda rng: tfm.init(rng, cfg),
         forward=tfm.forward,
         prefill=tfm.prefill,
         decode_step=tfm.decode_step,
-        make_cache=lambda batch, max_len, mem_len=0: tfm.make_cache(
-            cfg, batch, max_len, mem_len=mem_len
-        ),
+        make_cache=make_cache,
+        paged_decode_step=tfm.paged_decode_step,
+        write_prefill_pages=lambda cache, dense, page_ids:
+            tfm.write_prefill_pages(cfg, cache, dense, page_ids),
         encode=(lambda p, frames: tfm.encode(p, frames, cfg))
         if cfg.encoder_layers else None,
     )

@@ -119,11 +119,56 @@ def attention(q, k, v, *, impl="xla", causal=True, window=None, q_offset=0,
     raise ValueError(f"unknown attn impl {impl!r}")
 
 
-def decode_attention(q, k_cache, v_cache, kv_len, *, impl="xla"):
-    """q: (B, Hq, E) against caches (B, Hkv, S, E), masked at kv_len."""
+def decode_attention(q, k_cache, v_cache, kv_len, *, impl="xla",
+                     cache_layout="dense", page_table=None):
+    """q: (B, Hq, E) against caches (B, Hkv, S, E), masked at kv_len.
+
+    ``cache_layout="paged"`` reinterprets the caches as global page
+    pools (Hkv, P, page, E) addressed through ``page_table`` with
+    per-sequence ``kv_len`` (B,) — the serving engine's block-table
+    layout.
+    """
+    if cache_layout == "paged":
+        return paged_decode_attention(q, k_cache, v_cache, page_table,
+                                      kv_len, impl=impl)
     if impl == "pallas":
         return kops.decode_attention(q, k_cache, v_cache, kv_len)
     return sharded_decode_attention(q, k_cache, v_cache, kv_len)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens, *,
+                           impl="xla"):
+    """Single-token decode over a block-table paged KV cache.
+
+    q: (B, Hq, E); pools: (Hkv, P, page, E); page_table: (B, max_pages)
+    int32; kv_lens: (B,) int32 live tokens per sequence. The pallas path
+    gathers pages through the prefetched page table; the XLA path
+    gathers the pool into the dense per-sequence layout and runs the
+    same fp32 masked softmax as ``sharded_decode_attention`` (kept
+    op-for-op identical so batched greedy argmax agrees between the
+    dense wave engine and the paged continuous engine).
+    """
+    if impl == "pallas":
+        return kops.paged_decode_attention(q, k_pages, v_pages, page_table,
+                                           kv_lens)
+    b, hq, e = q.shape
+    hkv, _, page, _ = k_pages.shape
+    g = hq // hkv
+    # (Hkv, B, max_pages, page, E) -> (B, Hkv, max_pages*page, E)
+    k = jnp.moveaxis(k_pages[:, page_table], 0, 1).reshape(b, hkv, -1, e)
+    v = jnp.moveaxis(v_pages[:, page_table], 0, 1).reshape(b, hkv, -1, e)
+    s = k.shape[2]
+    qg = q.reshape(b, hkv, g, e)
+    scale = e**-0.5
+    sc = jnp.einsum("bkge,bkse->bkgs", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, None, None, :] < kv_lens[:, None, None, None]
+    sc = jnp.where(mask, sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bkse->bkge", p, v.astype(jnp.float32))
+    return (o / l).reshape(b, hq, e).astype(q.dtype)
 
 
 def sharded_decode_attention(q, k_cache, v_cache, kv_len):

@@ -161,6 +161,31 @@ def attn_decode(params, x, cfg: ArchConfig, *, cache_k, cache_v, pos,
             (cache_k, cache_v))
 
 
+def attn_paged_decode(params, x, cfg: ArchConfig, *, k_pages, v_pages,
+                      page_table, positions):
+    """One-token self-attention against a paged (block-table) cache.
+
+    x: (B, 1, D); pools: (Hkv, P, page, E); page_table: (B, max_pages);
+    positions: (B,) per-sequence absolute positions — unlike the dense
+    path there is no shared scalar `pos`, which is what lets the
+    continuous-batching engine decode sequences of different ages in
+    one batch. Returns (out, (new_k_pages, new_v_pages)).
+    """
+    b = x.shape[0]
+    page = k_pages.shape[2]
+    q, k, v = _qkv(params, x, cfg, positions=positions[:, None, None])
+    page_ids = page_table[jnp.arange(b), positions // page]
+    slots = positions % page
+    k_pages = k_pages.at[:, page_ids, slots].set(k[:, :, 0].transpose(1, 0, 2))
+    v_pages = v_pages.at[:, page_ids, slots].set(v[:, :, 0].transpose(1, 0, 2))
+    o = attn_mod.paged_decode_attention(
+        q[:, :, 0], k_pages, v_pages, page_table, positions + 1,
+        impl="pallas" if cfg.attn_impl == "pallas" else "xla",
+    )
+    return (o.reshape(b, 1, -1) @ params["wo"].astype(x.dtype),
+            (k_pages, v_pages))
+
+
 def cross_attn_block(params, x, cfg: ArchConfig, *, mem_k, mem_v):
     """Decoder cross-attention against precomputed encoder K/V."""
     dt = x.dtype
@@ -480,6 +505,83 @@ def make_cache(cfg: ArchConfig, batch: int, max_len: int, *, mem_len=0):
             for j, kind in enumerate(tail)
         }
     return cache
+
+
+def _check_paged_support(cfg: ArchConfig):
+    pattern, _, tail = unit_layout(cfg)
+    if (pattern != ("attn",) or tail or cfg.window is not None
+            or cfg.encoder_layers or not cfg.rope):
+        raise NotImplementedError(
+            "paged cache layout supports pure-attention rope decoder "
+            f"stacks only (got {cfg.name})"
+        )
+
+
+def make_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int):
+    """Global page pools, one (Hkv, P, page, E) pair per scanned unit.
+
+    The page table is NOT part of this pytree: one table row per
+    sequence is shared by every layer (a logical page maps to the same
+    physical slot in all pools), so it travels as a decode-step argument
+    instead.
+    """
+    _check_paged_support(cfg)
+    _, num_units, _ = unit_layout(cfg)
+    z = jnp.zeros((cfg.num_kv_heads, num_pages, page_size, cfg.hd),
+                  cfg.compute_dtype)
+    return {"units": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (num_units,) + x.shape),
+        {"b0": {"k": z, "v": z}},
+    )}
+
+
+def write_prefill_pages(cfg: ArchConfig, cache, dense_cache, page_ids):
+    """Copy-on-admit: scatter a batch-1 prefilled dense cache into pages.
+
+    dense k/v: (U, 1, Hkv, C, E) with C >= len(page_ids) * page_size;
+    page_ids: (n_pages,) physical pages allocated to the sequence.
+    Positions past the prompt in the last page carry garbage — masked by
+    the per-sequence kv_len at attention time.
+    """
+    n = page_ids.shape[0]
+
+    def write(pages, dense):
+        u, h, _, page, e = pages.shape
+        chunks = dense[:, 0, :, :n * page].reshape(u, h, n, page, e)
+        return pages.at[:, :, page_ids].set(chunks)
+
+    units = {}
+    for key, blk in cache["units"].items():
+        dense_blk = dense_cache["units"][key]
+        units[key] = dict(blk, k=write(blk["k"], dense_blk["k"]),
+                          v=write(blk["v"], dense_blk["v"]))
+    return dict(cache, units=units)
+
+
+def paged_decode_step(params, cfg: ArchConfig, token, cache, page_table,
+                      positions):
+    """token: (B, 1) int32; page_table: (B, max_pages) int32; positions:
+    (B,) int32 per-sequence -> (logits (B, 1, V), cache)."""
+    _check_paged_support(cfg)
+    x = _embed(params, token, cfg)
+
+    def unit_body(x, xs):
+        p_unit, c_unit = xs
+        p, c = p_unit["b0"], c_unit["b0"]
+        y, (kp, vp) = attn_paged_decode(
+            p["attn"], x, cfg, k_pages=c["k"], v_pages=c["v"],
+            page_table=page_table, positions=positions,
+        )
+        x = x + y
+        if cfg.moe is not None:
+            y, _ = moe_ffn(p["ffn"], x, cfg)
+        else:
+            y = mlp(p["ffn"], x, cfg)
+        return x + y, {"b0": {"k": kp, "v": vp}}
+
+    x, new_units = jax.lax.scan(unit_body, x,
+                                (params["units"], cache["units"]))
+    return _unembed(params, x, cfg), {"units": new_units}
 
 
 def decode_step(params, cfg: ArchConfig, token, cache, pos):

@@ -1,3 +1,14 @@
-from repro.serving.engine import ServingEngine, Request
+from repro.serving.engine import (
+    ContinuousBatchingEngine,
+    Request,
+    ServingEngine,
+)
+from repro.serving.paged_cache import PagedKVCacheManager, PagePoolExhausted
 
-__all__ = ["ServingEngine", "Request"]
+__all__ = [
+    "ServingEngine",
+    "ContinuousBatchingEngine",
+    "Request",
+    "PagedKVCacheManager",
+    "PagePoolExhausted",
+]

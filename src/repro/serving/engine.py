@@ -1,22 +1,29 @@
-"""Batched serving engine: queued requests -> batched prefill -> decode.
+"""Serving engines: dense batched waves and paged continuous batching.
 
-The serving shapes of the assignment (prefill_32k / decode_32k /
-long_500k) lower these exact step functions; this engine is the host
-loop around them: it pads a wave of requests to a common prompt length,
-prefills once, then decodes greedily step-by-step, retiring sequences on
-EOS or max_new_tokens. Continuous batching at fleet scale slots new
-requests into retired cache rows (slot reuse is exercised in tests).
+``ServingEngine`` is the baseline host loop around the serving-shape
+step functions: it pads a wave of equal-length requests to a common
+prompt, allocates a dense (batch, max_len) cache per wave, prefills
+once, then decodes greedily, and cannot admit new work until the whole
+wave retires.
+
+``ContinuousBatchingEngine`` removes both restrictions with the paged
+KV subsystem (serving/paged_cache.py, DESIGN.md §4): one long-lived
+decode batch over global page pools; finished sequences free their
+pages and queued requests of ANY prompt length are admitted mid-flight
+by prefilling into freshly allocated pages (copy-on-admit).
 """
 
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.serving.paged_cache import PagedKVCacheManager
 
 
 @dataclasses.dataclass
@@ -38,10 +45,15 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, model.cfg, t, c, pos)
         )
+        # jit'd with the wave's prompt length as a compile bucket —
+        # unjitted prefill re-traces the whole stack every wave and
+        # dominates serving wall time.
+        self._prefill_fn = jax.jit(
+            lambda p, t: model.prefill(p, model.cfg, t, self.max_len)
+        )
 
     def _prefill(self, tokens):
-        return self.model.prefill(self.params, self.cfg, tokens,
-                                  self.max_len)
+        return self._prefill_fn(self.params, tokens)
 
     def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
         """Bucket by prompt length, serve each bucket as batched waves."""
@@ -60,6 +72,7 @@ class ServingEngine:
         plens = {len(r.prompt) for r in requests}
         assert len(plens) == 1, "serve_wave needs equal prompt lengths"
         plen = plens.pop()
+        n_real = len(requests)
         reqs = list(requests)
         while len(reqs) < self.batch_size:  # pad with a dummy row
             reqs.append(Request(rid=-1,
@@ -68,16 +81,30 @@ class ServingEngine:
         prompts = np.stack([r.prompt for r in reqs]).astype(np.int32)
         logits, cache = self._prefill(jnp.asarray(prompts))
 
-        max_new = max(r.max_new_tokens for r in reqs)
-        out = {r.rid: [] for r in reqs if r.rid >= 0}
-        done = np.array([r.max_new_tokens == 0 for r in reqs])
-        token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        # Dummy rows never decode tokens: real requests alone bound the
+        # wave length, and the argmax + device->host transfer below run
+        # on the live batch prefix only.
+        max_new = max(r.max_new_tokens for r in requests)
+        out = {r.rid: [] for r in requests}
+        done = np.array([r.max_new_tokens == 0 for r in requests])
+        pad = jnp.ones((self.batch_size - n_real, 1), jnp.int32)
+
+        def next_token(logits):
+            live = jnp.argmax(logits[:n_real, -1], axis=-1).astype(
+                jnp.int32
+            )[:, None]
+            return live if n_real == self.batch_size else jnp.concatenate(
+                [live, pad]
+            )
+
+        token = next_token(logits)
         for step in range(max_new):
-            # One device->host transfer per step; per-row int() on the
-            # device array would sync the stream once per request.
-            token_host = np.asarray(token)
-            for i, r in enumerate(reqs):
-                if r.rid >= 0 and not done[i]:
+            # One device->host transfer per step, live rows only;
+            # per-row int() on the device array would sync the stream
+            # once per request.
+            token_host = np.asarray(token[:n_real])
+            for i, r in enumerate(requests):
+                if not done[i]:
                     t = int(token_host[i, 0])
                     out[r.rid].append(t)
                     if t == r.eos_id or len(out[r.rid]) >= r.max_new_tokens:
@@ -86,7 +113,147 @@ class ServingEngine:
                 break
             logits, cache = self._decode(self.params, cache, token,
                                          jnp.int32(plen + step))
-            token = jnp.argmax(logits[:, -1], axis=-1).astype(
-                jnp.int32
-            )[:, None]
+            token = next_token(logits)
+        return {rid: np.array(v, np.int32) for rid, v in out.items()}
+
+
+class ContinuousBatchingEngine:
+    """Paged-KV continuous batching over a single long-lived decode batch.
+
+    ``batch_size`` decode slots share page pools of ``num_pages`` pages.
+    Admission is reservation-based (DESIGN.md §4): a queued request is
+    admitted into a free slot as soon as pages for its prompt AND its
+    full decode budget are available, prefilled at its prompt length
+    rounded up to a page boundary (page-granular compile buckets), and
+    its dense batch-1 cache is scattered into the allocated pages. Every
+    decode step advances all live slots with per-sequence positions;
+    retiring sequences free their pages immediately, unblocking the
+    admission check that runs between steps.
+    """
+
+    def __init__(self, model: Model, params, *, max_len: int = 512,
+                 batch_size: int = 4, page_size: int = 16,
+                 num_pages: int | None = None):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self.page_size = page_size
+        self.max_pages = -(-max_len // page_size)
+        if num_pages is None:
+            num_pages = batch_size * self.max_pages + 1  # + scratch page
+        self.num_pages = num_pages
+        self.peak_pages_used = 0  # across serve() calls, for benchmarks
+        self._decode = jax.jit(
+            lambda p, c, t, table, pos: model.paged_decode_step(
+                p, model.cfg, t, c, table, pos
+            )
+        )
+        self._write = jax.jit(model.write_prefill_pages)
+        # compile buckets: (prompt_len, page-rounded cache len)
+        self._prefill = jax.jit(
+            lambda p, t, max_len: model.prefill(p, model.cfg, t, max_len),
+            static_argnums=2,
+        )
+
+    def kv_bytes_per_page(self) -> int:
+        cfg = self.cfg
+        itemsize = jnp.dtype(cfg.compute_dtype).itemsize
+        return (2 * cfg.num_layers * cfg.num_kv_heads * self.page_size
+                * cfg.hd * itemsize)
+
+    def _n_pages(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
+        B, ps = self.batch_size, self.page_size
+        mgr = PagedKVCacheManager(self.num_pages, ps, num_slots=B,
+                                  max_pages_per_seq=self.max_pages)
+        cache = self.model.make_cache(B, self.max_len, cache_layout="paged",
+                                      page_size=ps, num_pages=self.num_pages)
+        queue = deque(requests)
+        active: dict[int, Request] = {}
+        out: dict[int, list[int]] = {}
+        tokens = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B,), np.int32)
+
+        def try_admit():
+            nonlocal cache
+            for slot in range(B):
+                while slot not in active and queue:
+                    r = queue[0]
+                    if r.max_new_tokens <= 0:  # nothing to generate
+                        queue.popleft()
+                        out[r.rid] = []
+                        continue
+                    plen = len(r.prompt)
+                    budget = plen + r.max_new_tokens
+                    if budget > self.max_len:
+                        raise ValueError(
+                            f"request {r.rid} needs {budget} > max_len "
+                            f"{self.max_len}"
+                        )
+                    if mgr.pages_needed(budget) > self.num_pages - 1:
+                        # Even an empty pool can never hold it — waiting
+                        # would silently drop the request (and everything
+                        # FIFO-queued behind it) once the batch drains.
+                        raise ValueError(
+                            f"request {r.rid} needs "
+                            f"{mgr.pages_needed(budget)} pages > pool size "
+                            f"{self.num_pages - 1}"
+                        )
+                    if not mgr.can_admit(budget):
+                        return  # FIFO: wait for pages, don't starve r
+                    queue.popleft()
+                    ids = mgr.admit(slot, plen, reserve=r.max_new_tokens)
+                    self.peak_pages_used = max(self.peak_pages_used,
+                                               mgr.peak_pages_used)
+                    # Prefill at the exact prompt length into a dense
+                    # batch-1 cache rounded up to a page boundary, then
+                    # scatter it into the allocated pages (copy-on-
+                    # admit). The last partial page's tail is zeros,
+                    # masked by the per-sequence kv_len.
+                    n_prompt_pages = self._n_pages(plen)
+                    logits, dense = self._prefill(
+                        self.params, jnp.asarray(r.prompt[None]),
+                        n_prompt_pages * ps,
+                    )
+                    cache = self._write(
+                        cache, dense,
+                        jnp.asarray(ids[:n_prompt_pages], jnp.int32),
+                    )
+                    t = int(jnp.argmax(logits[0, -1]))
+                    out[r.rid] = [t]
+                    if t == r.eos_id or r.max_new_tokens <= 1:
+                        mgr.free(slot)  # finished straight out of prefill
+                        continue
+                    active[slot] = r
+                    tokens[slot, 0] = t
+                    positions[slot] = plen
+
+        try_admit()
+        while active:
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(tokens),
+                jnp.asarray(mgr.table()), jnp.asarray(positions),
+            )
+            token_host = np.asarray(
+                jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            )
+            for slot, r in list(active.items()):
+                t = int(token_host[slot])
+                out[r.rid].append(t)
+                positions[slot] += 1
+                mgr.append(slot)
+                if t == r.eos_id or len(out[r.rid]) >= r.max_new_tokens:
+                    mgr.free(slot)
+                    del active[slot]
+                    tokens[slot, 0] = 0
+                    positions[slot] = 0
+                else:
+                    tokens[slot, 0] = t
+            try_admit()
+        self.peak_pages_used = max(self.peak_pages_used,
+                                   mgr.peak_pages_used)
         return {rid: np.array(v, np.int32) for rid, v in out.items()}

@@ -1,0 +1,142 @@
+"""Block-table KV-cache manager: fixed-size pages in a global pool.
+
+Host-side bookkeeping for the paged serving path (DESIGN.md §4). The
+device state it manages is split in two:
+
+* the page *pools* — (Hkv, P, page, E) arrays per layer, built by
+  ``Model.make_cache(cache_layout="paged")`` — which this module never
+  touches directly;
+* the page *table* — a (num_slots, max_pages) int32 array of physical
+  page ids, one row per decode slot — which it owns and hands to
+  ``paged_decode_step`` every step.
+
+Page id 0 is reserved as a scratch page: empty table entries and idle
+decode slots point at it, so masked/dead lanes of the batched decode
+step write and read harmless garbage there instead of corrupting live
+pages. The free list is LIFO so a freed sequence's pages are reissued
+to the next admit (slot reuse is copy-on-admit: the new request's
+prefilled KV overwrites them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+SCRATCH_PAGE = 0
+
+
+class PagePoolExhausted(RuntimeError):
+    """Raised when an alloc/append cannot be served from the free list."""
+
+
+@dataclasses.dataclass
+class PagedSeq:
+    pages: list[int]
+    length: int  # live tokens (kv_len)
+
+    @property
+    def capacity(self) -> int:
+        return len(self.pages)
+
+
+class PagedKVCacheManager:
+    """Per-sequence page tables over a global pool of ``num_pages``.
+
+    Sequences are keyed by decode slot (0..num_slots-1). ``admit``
+    allocates pages for a prompt plus an optional decode reservation,
+    ``append`` extends a sequence one token (allocating a page on
+    boundary crossings past the reservation), ``free`` returns every
+    page to the pool.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 num_slots: int, max_pages_per_seq: int):
+        assert num_pages > 1, "pool needs at least one page beyond scratch"
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.num_slots = num_slots
+        self.max_pages_per_seq = max_pages_per_seq
+        # LIFO free list, scratch page 0 excluded
+        self._free = list(range(num_pages - 1, 0, -1))
+        self._seqs: dict[int, PagedSeq] = {}
+        self.peak_pages_used = 0
+
+    # -- pool accounting --
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_used(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def pages_needed(self, total_len: int) -> int:
+        return -(-total_len // self.page_size)
+
+    def can_admit(self, total_len: int) -> bool:
+        n = self.pages_needed(total_len)
+        return n <= min(self.available, self.max_pages_per_seq)
+
+    # -- primitive alloc/free --
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise PagePoolExhausted(
+                f"need {n} pages, {len(self._free)} free"
+            )
+        ids = [self._free.pop() for _ in range(n)]
+        self.peak_pages_used = max(self.peak_pages_used, self.pages_used)
+        return ids
+
+    def free(self, slot: int) -> None:
+        seq = self._seqs.pop(slot)
+        self._free.extend(reversed(seq.pages))
+
+    # -- sequence lifecycle --
+    def admit(self, slot: int, prompt_len: int, *,
+              reserve: int = 0) -> list[int]:
+        """Allocate pages for ``prompt_len`` + ``reserve`` future tokens.
+
+        Returns the allocated page ids (prompt pages first). The
+        reservation is the admission policy: a request is only admitted
+        once its whole decode budget fits, so a running sequence can
+        never hit pool exhaustion mid-flight (no preemption needed).
+        """
+        assert slot not in self._seqs, f"slot {slot} still occupied"
+        n = self.pages_needed(prompt_len + reserve)
+        if n > self.max_pages_per_seq:
+            raise ValueError(
+                f"request needs {n} pages > max_pages_per_seq "
+                f"{self.max_pages_per_seq}"
+            )
+        ids = self.alloc(n)
+        self._seqs[slot] = PagedSeq(pages=ids, length=prompt_len)
+        return ids
+
+    def append(self, slot: int) -> None:
+        """Record one generated token; grow the table past the
+        reservation if the new position crosses into an unowned page."""
+        seq = self._seqs[slot]
+        seq.length += 1
+        if seq.length > seq.capacity * self.page_size:
+            if seq.capacity + 1 > self.max_pages_per_seq:
+                raise PagePoolExhausted(
+                    f"slot {slot} exceeded max_pages_per_seq"
+                )
+            seq.pages.extend(self.alloc(1))
+
+    # -- device-facing views --
+    def table(self) -> np.ndarray:
+        """(num_slots, max_pages) int32; empty entries -> scratch page."""
+        t = np.full((self.num_slots, self.max_pages_per_seq), SCRATCH_PAGE,
+                    np.int32)
+        for slot, seq in self._seqs.items():
+            t[slot, :len(seq.pages)] = seq.pages
+        return t
+
+    def kv_lens(self) -> np.ndarray:
+        out = np.zeros((self.num_slots,), np.int32)
+        for slot, seq in self._seqs.items():
+            out[slot] = seq.length
+        return out

@@ -8,13 +8,17 @@ tiled task graphs and run through a multi-stream list scheduler.
 """
 
 from repro.sim.hw import EDGE_HW, HWConfig
-from repro.sim.workload import AttentionWorkload, PAPER_NETWORKS
+from repro.sim.workload import (
+    AttentionWorkload,
+    PagedDecodeWorkload,
+    PAPER_NETWORKS,
+)
 from repro.sim.engine import simulate, SimResult
 from repro.sim.schedules import METHODS, build_schedule, Tiling
 from repro.sim.search import search_tiling
 
 __all__ = [
-    "EDGE_HW", "HWConfig", "AttentionWorkload", "PAPER_NETWORKS",
-    "simulate", "SimResult", "METHODS", "build_schedule", "Tiling",
-    "search_tiling",
+    "EDGE_HW", "HWConfig", "AttentionWorkload", "PagedDecodeWorkload",
+    "PAPER_NETWORKS", "simulate", "SimResult", "METHODS", "build_schedule",
+    "Tiling", "search_tiling",
 ]

@@ -26,6 +26,13 @@ class HWConfig:
     l1_bytes: int = 5 * 2**20
     bytes_per_elem: int = 2          # fp16 end-to-end (paper §5.6)
 
+    # Per-descriptor DMA issue cost (cycles). Contiguous prefill tiles
+    # amortize it to ~0, but the paged decode path moves one descriptor
+    # per KV page, so small pages trade boundary waste for issue
+    # overhead — the knob that gives the page-size search an interior
+    # optimum (sim/schedules.build_paged_decode).
+    dma_page_setup_cycles: float = 64.0
+
     # VEC microcosts (cycles per 256-wide vector op). exp dominates:
     # range reduction + polynomial + reconstruction on 16-bit lanes.
     vec_exp_cost: float = 48.0

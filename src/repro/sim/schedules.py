@@ -17,7 +17,7 @@ import math
 
 from repro.sim.engine import Task
 from repro.sim.hw import HWConfig
-from repro.sim.workload import AttentionWorkload
+from repro.sim.workload import AttentionWorkload, PagedDecodeWorkload
 
 METHODS = ("layerwise", "softpipe", "flat", "tileflow", "fusemax", "mas")
 
@@ -494,6 +494,82 @@ def build_fusemax(w, t, hw) -> list[Task] | None:
     return b.tasks
 
 
+# ---------------------------------------------------------------------------
+# Paged decode: one continuous-batching step; KV gathered page by page.
+# ---------------------------------------------------------------------------
+
+
+def build_paged_decode(w, t, hw) -> list[Task] | None:
+    """Task graph for one paged decode step (PagedDecodeWorkload).
+
+    ``t.nkv`` is the PAGE SIZE — the tiling factor the search sweeps —
+    and ``t.hh`` the kv-head tile; ``t.nq`` is ignored (the MXU row dim
+    is the fixed GQA group). Per live page: one K-page DMA (descriptor
+    setup + page bytes, partial pages charged whole), a (group x page)
+    QK^T MAC, a fusemax-style partial-softmax VEC pass, one V-page DMA
+    and the PV accumulate — MAC/VEC pipelined across pages exactly like
+    the online-softmax decode kernel.
+    """
+    page = min(t.nkv, w.seq)
+    heads_core = -(-w.heads // hw.cores)
+    hh = min(t.hh, heads_core)
+    bpe = hw.bytes_per_elem
+    g, e = w.group, w.emb
+    # L1: Q + O + double-buffered K/V pages + the (g, page) score tile
+    need = hh * (2 * g * e + 4 * page * e + 2 * g * page) * bpe
+    if need > hw.l1_bytes:
+        return None
+
+    dma_bpc = hw.dram_bytes_per_cycle / hw.cores
+    tasks: list[Task] = []
+
+    def emit(**kw) -> int:
+        tasks.append(Task(**kw))
+        return len(tasks) - 1
+
+    def dma_page(nbytes, deps=(), tag=""):
+        return emit(unit="DMA",
+                    cycles=hw.dma_page_setup_cycles + nbytes / dma_bpc,
+                    deps=tuple(deps), tag=tag, dram_read_bytes=nbytes,
+                    l1_bytes=nbytes)
+
+    page_b = hh * page * e * bpe
+    q_b = hh * g * e * bpe
+
+    for s, kv_len in enumerate(w.kv_lens):
+        n_pages = -(-kv_len // page)
+        for ht in range(-(-heads_core // hh)):
+            qd = emit(unit="DMA", cycles=q_b / dma_bpc, tag=f"Q{s}.{ht}",
+                      dram_read_bytes=q_b, l1_bytes=q_b)
+            prev_acc = None
+            for j in range(n_pages):
+                kd = dma_page(page_b, tag=f"K{s}.{ht}.{j}")
+                sj = emit(unit="MAC", cycles=hh * hw.mac_cycles(g, e, page),
+                          deps=(qd, kd), tag=f"S{s}.{ht}.{j}",
+                          mac_ops=hh * g * page * e,
+                          l1_bytes=(g * e + page * e + g * page) * hh * bpe)
+                # partial softmax + running (m, l) + acc rescale
+                r = hh * g
+                cyc = hw.vec_softmax_cycles(r, page) + r * (
+                    2 * hw.vec_ew_cost + e / hw.vec_lanes * 2
+                )
+                pj = emit(unit="VEC", cycles=cyc, deps=(sj,),
+                          tag=f"P{s}.{ht}.{j}",
+                          vec_ops=hw.vec_ops_softmax(r, page) + 2 * r * e,
+                          l1_bytes=2 * r * page * bpe)
+                vd = dma_page(page_b, tag=f"V{s}.{ht}.{j}")
+                deps = [pj, vd] + ([prev_acc] if prev_acc is not None else [])
+                prev_acc = emit(unit="MAC",
+                                cycles=hh * hw.mac_cycles(g, page, e),
+                                deps=tuple(deps), tag=f"A{s}.{ht}.{j}",
+                                mac_ops=hh * g * page * e,
+                                l1_bytes=(g * page + page * e + g * e)
+                                * hh * bpe)
+            emit(unit="DMA", cycles=q_b / dma_bpc, deps=(prev_acc,),
+                 tag=f"O{s}.{ht}", dram_write_bytes=q_b, l1_bytes=q_b)
+    return tasks
+
+
 _BUILDERS = {
     "mas": build_mas,
     "flat": build_flat,
@@ -501,6 +577,7 @@ _BUILDERS = {
     "softpipe": build_softpipe,
     "tileflow": build_tileflow,
     "fusemax": build_fusemax,
+    "paged_decode": build_paged_decode,
 }
 
 
@@ -510,10 +587,21 @@ def build_schedule(method: str, w: AttentionWorkload, t: Tiling,
 
 
 def tiling_space(w: AttentionWorkload, hw: HWConfig) -> list[Tiling]:
-    """The search space of multi-tiered tiling factors (§4.2)."""
+    """The search space of multi-tiered tiling factors (§4.2).
+
+    For paged decode workloads the N_Q tier collapses (the MXU row dim
+    is the fixed GQA group) and N_KV becomes the page size, extended
+    down to 16 rows: decode is DMA-bound, so the optimum balances
+    partial-page boundary waste against per-page descriptor overhead
+    and sits well below the prefill sub-tile sizes.
+    """
     heads_core = -(-w.heads // hw.cores)
     hhs = sorted({h for h in (1, 2, 4, 8, 16) if h <= heads_core}
                  | {heads_core})
+    if isinstance(w, PagedDecodeWorkload):
+        pages = sorted({p for p in (16, 32, 64, 128, 256, 512)
+                        if p <= w.seq} | {w.seq})
+        return [Tiling(hh, 1, p) for hh in hhs for p in pages]
     nqs = sorted({n for n in (16, 32, 64, 128, 256) if n <= w.seq} | {w.seq})
     nkvs = sorted({n for n in (64, 128, 256, 512) if n <= w.seq} | {w.seq})
     return [Tiling(hh, nq, nkv) for hh in hhs for nq in nqs for nkv in nkvs]

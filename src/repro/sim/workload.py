@@ -44,6 +44,54 @@ class AttentionWorkload:
         return self.batch * self.heads * self._score_elems * bpe
 
 
+@dataclasses.dataclass(frozen=True)
+class PagedDecodeWorkload:
+    """One continuous-batching decode step over a paged KV cache.
+
+    Each sequence contributes a (group x kv_len) score row per kv head;
+    the KV cache is fetched page by page, and a partially filled last
+    page still moves a whole page of DMA bytes — page size is the
+    tiling factor the §4.2 search has to balance against per-page
+    descriptor overhead (hw.dma_page_setup_cycles).
+
+    ``heads`` counts KV heads; ``group`` is the GQA group (query heads
+    per kv head — the MXU row dimension, like the decode kernel).
+    """
+
+    name: str
+    heads: int
+    emb: int
+    kv_lens: tuple[int, ...]      # per-sequence live cache lengths
+    group: int = 1
+
+    @property
+    def batch(self) -> int:
+        return len(self.kv_lens)
+
+    @property
+    def seq(self) -> int:
+        """Longest live sequence — anchors the tiling search space."""
+        return max(self.kv_lens)
+
+    @property
+    def total_kv(self) -> int:
+        return sum(self.kv_lens)
+
+    @property
+    def mac_ops(self) -> int:
+        """Useful MACs: QK^T + PV over live cache entries only."""
+        return 2 * self.heads * self.group * self.total_kv * self.emb
+
+    @property
+    def softmax_elems(self) -> int:
+        return self.heads * self.group * self.total_kv
+
+    def kv_bytes(self, bpe: int, page: int) -> int:
+        """Page-granular K+V DMA: partial pages are charged whole."""
+        pages = sum(-(-n // page) for n in self.kv_lens)
+        return 2 * self.heads * pages * page * self.emb * bpe
+
+
 # Table 1: Network Configuration and Hyper-Parameters.
 PAPER_NETWORKS = {
     "bert-base-t5-base": AttentionWorkload("bert-base-t5-base", 12, 512, 64),
