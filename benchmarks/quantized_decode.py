@@ -1,0 +1,215 @@
+"""Int8 vs bf16 KV-cache decode across the config zoo's GQA shapes.
+
+Two views per architecture (DESIGN.md §5):
+
+* **measured** — the continuous-batching engine serves the same
+  mixed-length request set from a bf16 and an int8 paged KV pool on the
+  smoke-sized model: greedy-token agreement rate, host wall tokens/s,
+  peak KV bytes resident (pages x dtype-aware page footprint incl. the
+  scales side-table), and mean pool occupancy.
+* **simulated** — one continuous-batching decode step at the REAL
+  architecture's attention shape (kv heads / head_dim / GQA group) over
+  a long-context request mix, priced by the edge-device event simulator:
+  decode tokens/s (batch tokens per step / step seconds at 3.75 GHz) and
+  KV bytes moved per step, each precision at its own best searched page
+  size, plus the §4.2 grid search over the joint (page, precision)
+  space — whose winner must surface ``kv_bpe`` in the chosen config.
+
+Writes ``BENCH_quant.json`` at the repo root. ``--smoke`` restricts to
+one architecture and a smaller request set for CI.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, get_smoke
+from repro.models import build_model
+from repro.serving import ContinuousBatchingEngine
+from repro.sim import EDGE_HW, PagedDecodeWorkload, simulate
+from repro.sim.schedules import build_schedule, tiling_space
+
+try:  # package mode (benchmarks/run.py) vs script mode (ci.sh)
+    from benchmarks.serving_throughput import _timed, make_requests
+except ImportError:
+    from serving_throughput import _timed, make_requests
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_quant.json"
+
+GQA_ARCHS = ["internlm2-1.8b", "qwen3-1.7b", "phi4-mini-3.8b"]
+MAX_LEN = 64
+BATCH = 4
+PAGE = 8
+MAX_NEW = 6
+
+
+def _agreement(a, b) -> float:
+    num = den = 0
+    for rid in a:
+        x, y = list(a[rid]), list(b.get(rid, []))
+        den += max(len(x), len(y))
+        num += sum(int(u == v) for u, v in zip(x, y))
+    return num / den if den else 1.0
+
+
+def measured_section(arch_id: str, n_requests: int) -> dict:
+    cfg = get_smoke(arch_id)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    requests = make_requests(cfg, n_requests, max_new=MAX_NEW,
+                             max_prompt=36)
+
+    def engine(kv_dtype):
+        return ContinuousBatchingEngine(model, params, max_len=MAX_LEN,
+                                        batch_size=BATCH, page_size=PAGE,
+                                        kv_dtype=kv_dtype)
+
+    base = engine(None)
+    out_b, sec_b = _timed(base, requests)
+    quant = engine("int8")
+    out_q, sec_q = _timed(quant, requests)
+    tokens = sum(len(v) for v in out_b.values())
+
+    def side(eng, sec):
+        occ = eng.occupancy_log or [0]
+        return {
+            "seconds": sec,
+            "tokens_per_s": tokens / sec,
+            "peak_kv_bytes": eng.peak_pages_used * eng.kv_bytes_per_page(),
+            "kv_bytes_per_page": eng.kv_bytes_per_page(),
+            "mean_pool_occupancy_pages": float(np.mean(occ)),
+        }
+
+    return {
+        "n_requests": len(requests),
+        "generated_tokens": tokens,
+        "greedy_agreement": _agreement(out_b, out_q),
+        "bf16": side(base, sec_b),
+        "int8": side(quant, sec_q),
+        "kv_bytes_ratio": (quant.peak_pages_used * quant.kv_bytes_per_page()
+                           / max(1, base.peak_pages_used
+                                 * base.kv_bytes_per_page())),
+    }
+
+
+def sim_section(arch_id: str) -> dict:
+    """One long-context decode step at the real architecture's shape.
+
+    A single sweep over the joint (H_h, page, kv_bpe) tiling space
+    yields both the per-precision optima (bf16 vs int8 at their own
+    best page sizes) and the overall §4.2 grid-search winner — whose
+    ``kv_bpe`` is the "precision was searched" evidence.
+    """
+    arch = get_arch(arch_id)
+    rng = np.random.default_rng(1)
+    kv_lens = tuple(int(n) for n in rng.integers(512, 4096, size=8))
+    group = arch.num_heads // arch.num_kv_heads
+    w = PagedDecodeWorkload(f"{arch_id}-decode", heads=arch.num_kv_heads,
+                            emb=arch.hd, group=group, kv_lens=kv_lens)
+
+    best_per_bpe: dict = {}
+    evals = 0
+    for t in tiling_space(w, EDGE_HW):
+        tasks = build_schedule("paged_decode", w, t, EDGE_HW)
+        evals += 1
+        if tasks is None:
+            continue
+        r = simulate(tasks, EDGE_HW)
+        cur = best_per_bpe.get(t.kv_bpe)
+        if cur is None or r.cycles < cur[1].cycles:
+            best_per_bpe[t.kv_bpe] = (t, r)
+
+    def side(kv_bpe: int) -> dict:
+        assert kv_bpe in best_per_bpe, (
+            f"{arch_id}: no feasible paged-decode tiling at kv_bpe={kv_bpe}"
+        )
+        t, r = best_per_bpe[kv_bpe]
+        step_s = r.cycles / (EDGE_HW.freq_ghz * 1e9)
+        # pure KV traffic (pages + scale side-table), excluding the
+        # precision-independent Q/O DMA that r.dram_read_bytes includes
+        kv_moved = dataclasses.replace(w, kv_bpe=t.kv_bpe).kv_bytes(
+            EDGE_HW.bytes_per_elem, t.nkv)
+        return {
+            "page_size": t.nkv,
+            "kv_bpe": t.kv_bpe,
+            "cycles": r.cycles,
+            "kv_bytes_moved": kv_moved,
+            "dram_read_bytes": r.dram_read_bytes,
+            "tokens_per_s": len(kv_lens) / step_s,
+        }
+
+    bf16 = side(EDGE_HW.bytes_per_elem)
+    int8 = side(1)
+    # the joint winner across precisions == the §4.2 grid-search result
+    t, r = min(best_per_bpe.values(), key=lambda tr: tr[1].cycles)
+    return {
+        "kv_lens": list(kv_lens),
+        "bf16": bf16,
+        "int8": int8,
+        "tokens_per_s_ratio": int8["tokens_per_s"] / bf16["tokens_per_s"],
+        "kv_bytes_ratio": int8["kv_bytes_moved"] / bf16["kv_bytes_moved"],
+        "searched": {
+            "hh": t.hh,
+            "page_size": t.nkv,
+            "kv_bpe": t.kv_bpe,
+            "cycles": r.cycles,
+            "evals": evals,
+        },
+    }
+
+
+def run(archs: list[str], n_requests: int) -> dict:
+    report: dict = {"archs": {}}
+    for arch_id in archs:
+        report["archs"][arch_id] = {
+            "measured": measured_section(arch_id, n_requests),
+            "sim": sim_section(arch_id),
+        }
+    entries = report["archs"].values()
+    report["headline"] = {
+        "min_sim_tokens_per_s_ratio": min(
+            a["sim"]["tokens_per_s_ratio"] for a in entries),
+        "min_greedy_agreement": min(
+            a["measured"]["greedy_agreement"] for a in entries),
+        "searched_kv_bpe": [a["sim"]["searched"]["kv_bpe"]
+                            for a in entries],
+    }
+    return report
+
+
+def main(emit, smoke: bool = False) -> dict:
+    archs = GQA_ARCHS[:1] if smoke else GQA_ARCHS
+    report = run(archs, n_requests=6 if smoke else 10)
+    OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    h = report["headline"]
+    first = report["archs"][archs[0]]
+    emit(
+        "quantized_decode/int8",
+        first["measured"]["int8"]["seconds"] * 1e6,
+        f"sim_tok/s={h['min_sim_tokens_per_s_ratio']:.2f}x_bf16 "
+        f"agree={h['min_greedy_agreement']:.3f} "
+        f"searched_kv_bpe={h['searched_kv_bpe']}",
+    )
+    return report
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    r = main(lambda name, us, derived="": print(f"{name},{us:.3f},{derived}"),
+             smoke=smoke)
+    for arch_id, a in r["archs"].items():
+        m, s = a["measured"], a["sim"]
+        print(f"{arch_id}: agree={m['greedy_agreement']:.3f} "
+              f"sim {s['bf16']['tokens_per_s']:.0f} -> "
+              f"{s['int8']['tokens_per_s']:.0f} tok/s "
+              f"({s['tokens_per_s_ratio']:.2f}x), "
+              f"kv bytes {s['kv_bytes_ratio']:.2f}x, "
+              f"searched kv_bpe={s['searched']['kv_bpe']} "
+              f"page={s['searched']['page_size']}")

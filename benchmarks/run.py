@@ -32,6 +32,8 @@ def main() -> None:
     seq_limit.main(emit)
     from benchmarks import serving_throughput
     serving_throughput.main(emit)
+    from benchmarks import quantized_decode
+    quantized_decode.main(emit)
     from benchmarks import kernel_bench
     kernel_bench.main(emit)
     print(f"# {len(lines)} benchmark rows", file=sys.stderr)

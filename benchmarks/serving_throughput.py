@@ -11,7 +11,10 @@ excluded) and report:
 * ``peak_kv_bytes`` — peak KV bytes resident: the dense engine pins a
   full (batch, max_len) cache per wave; the paged engine's peak is its
   high-water page count times the per-page footprint (``pool_bytes`` is
-  the preallocated pool for reference).
+  the preallocated pool for reference);
+* ``occupancy`` — the paged pool's pages-in-use per decode step of the
+  timed pass, so the peak-KV-byte claim is auditable over time rather
+  than a single high-water number.
 
 Writes ``BENCH_serving.json`` at the repo root. A sim section runs the
 page-size tiling search (§4.2 extended to decode) for a workload shaped
@@ -44,23 +47,30 @@ PAGE = 8
 MAX_NEW = 8
 
 
-def make_requests(cfg, n: int, seed: int = 0) -> list[Request]:
+def make_requests(cfg, n: int, seed: int = 0, *, max_new: int = MAX_NEW,
+                  max_prompt: int = 40) -> list[Request]:
     rng = np.random.default_rng(seed)
-    lens = rng.integers(5, 40, size=n)
+    lens = rng.integers(5, max_prompt, size=n)
     return [
         Request(rid=i,
                 prompt=rng.integers(3, cfg.vocab_size,
                                     size=(int(ln),)).astype(np.int32),
-                max_new_tokens=MAX_NEW, eos_id=-2)
+                max_new_tokens=max_new, eos_id=-2)
         for i, ln in enumerate(lens)
     ]
 
 
 def _timed(engine, requests) -> tuple[dict, float]:
     engine.serve([Request(**r.__dict__) for r in requests])  # warm-up
-    t0 = time.perf_counter()
-    out = engine.serve([Request(**r.__dict__) for r in requests])
-    return out, time.perf_counter() - t0
+    # best-of-2 timed passes: damps host scheduling jitter so the CI
+    # bench-regression guard compares serving-path changes, not noise
+    best = None
+    for _ in range(2):
+        t0 = time.perf_counter()
+        out = engine.serve([Request(**r.__dict__) for r in requests])
+        sec = time.perf_counter() - t0
+        best = sec if best is None else min(best, sec)
+    return out, best
 
 
 def run(n_requests: int) -> dict:
@@ -112,12 +122,20 @@ def run(n_requests: int) -> dict:
             "peak_pages_used": paged.peak_pages_used,
             "peak_kv_bytes": paged_kv,
             "pool_bytes": (paged.num_pages - 1) * page_bytes,
+            "occupancy": {
+                "pages_used_per_step": list(paged.occupancy_log),
+                "mean_pages": float(np.mean(paged.occupancy_log))
+                if paged.occupancy_log else 0.0,
+                "mean_kv_bytes": float(np.mean(paged.occupancy_log))
+                * page_bytes if paged.occupancy_log else 0.0,
+            },
         },
         "throughput_ratio": sec_d / sec_c,
         "kv_bytes_ratio": paged_kv / dense_kv,
         "sim_page_search": {
             "best_page_size": best.tiling.nkv,
             "best_hh": best.tiling.hh,
+            "best_kv_bpe": best.tiling.kv_bpe,
             "cycles": best.result.cycles,
             "evals": best.evals,
         },

@@ -1,0 +1,81 @@
+"""Fail CI when serving throughput regresses vs the committed baseline.
+
+Usage: check_bench_regression.py BASELINE.json CURRENT.json [--threshold F]
+
+Guards the paged-continuous tokens/s of a freshly produced
+BENCH_serving.json against the committed one. Raw wall-clock tokens/s
+swings with host load (shared CI machines vary far more than any real
+regression), so the guarded metric is machine-normalized: the
+dense-wave engine that runs back-to-back in the same process is the
+speed control, and the guard compares
+
+    paged tokens/s / dense tokens/s   (== the committed throughput_ratio)
+
+which isolates serving-path regressions from host noise. Exits non-zero
+when that ratio drops more than ``threshold`` (default 10%) below the
+baseline; absolute tokens/s are printed informationally.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument("current", type=Path)
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max fractional normalized tokens/s drop allowed")
+    args = ap.parse_args()
+
+    # An empty/unreadable baseline (e.g. `git show` truncated the temp
+    # file before failing) means "no baseline", not a guard failure.
+    try:
+        base = json.loads(args.baseline.read_text())
+    except (OSError, json.JSONDecodeError):
+        print(f"bench-guard: no usable baseline at {args.baseline}; "
+              "skipping")
+        return 0
+    cur = json.loads(args.current.read_text())
+
+    # The ratio is workload-dependent (more mixed-length requests
+    # fragment the dense waves further), so only compare like-for-like
+    # runs: a baseline produced at a different request count (run.py
+    # full mode vs ci.sh --smoke) is not a regression signal.
+    b_n, c_n = base.get("n_requests"), cur.get("n_requests")
+    if b_n != c_n:
+        print(f"bench-guard: baseline n_requests={b_n} != current "
+              f"n_requests={c_n}; workloads differ, skipping")
+        return 0
+
+    for key in ("paged_continuous", "dense_wave"):
+        b = base.get(key, {}).get("tokens_per_s")
+        c = cur.get(key, {}).get("tokens_per_s")
+        if b and c:
+            print(f"bench-guard: {key}: {b:.1f} -> {c:.1f} tok/s "
+                  f"({c / b - 1.0:+.1%}, informational)")
+
+    b_ratio = base.get("throughput_ratio")
+    c_ratio = cur.get("throughput_ratio")
+    if not b_ratio or not c_ratio:
+        print("bench-guard: no throughput_ratio in one of the files; "
+              "skipping")
+        return 0
+    drop = 1.0 - c_ratio / b_ratio
+    print(f"bench-guard: normalized paged tokens/s (paged/dense ratio): "
+          f"{b_ratio:.2f}x -> {c_ratio:.2f}x ({-drop:+.1%})")
+    if drop > args.threshold:
+        print(f"bench-guard: normalized tokens/s dropped "
+              f"{drop:.1%} > {args.threshold:.0%} vs committed baseline",
+              file=sys.stderr)
+        return 1
+    print("bench-guard: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,14 +7,29 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# Fast-fail signal on the paged serving subsystem before the full suite.
-python -m pytest -x -q tests/test_paged_cache.py
+# Fast-fail signal on the paged serving + quantized-KV subsystems
+# before the full suite; the full run skips them to avoid paying the
+# jit compiles twice.
+python -m pytest -x -q tests/test_paged_cache.py tests/test_quantized_kv.py
 
-python -m pytest -x -q
+python -m pytest -x -q --ignore=tests/test_paged_cache.py \
+  --ignore=tests/test_quantized_kv.py
 
 # Serving smoke: dense-wave vs paged-continuous on a mixed-length
 # request set (asserts output equivalence, writes BENCH_serving.json).
+# The committed baseline is captured first so the regression guard can
+# compare the fresh run against it.
+BENCH_BASELINE="$(mktemp)"
+git show HEAD:BENCH_serving.json > "$BENCH_BASELINE" 2>/dev/null \
+  || cp BENCH_serving.json "$BENCH_BASELINE" 2>/dev/null || true
 python benchmarks/serving_throughput.py --smoke
+python scripts/check_bench_regression.py "$BENCH_BASELINE" \
+  BENCH_serving.json
+rm -f "$BENCH_BASELINE"
+
+# Int8 KV-cache smoke: greedy agreement + simulated decode speedup vs
+# the bf16 paged baseline (writes BENCH_quant.json).
+python benchmarks/quantized_decode.py --smoke
 
 python - <<'PY'
 import numpy as np

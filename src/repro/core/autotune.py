@@ -12,6 +12,7 @@ wall-clock timing refines it.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 from repro.core.policy import (
     DEFAULT_VMEM_BUDGET,
@@ -35,6 +36,9 @@ class KernelChoice:
     mxu_s: float
     hbm_s: float
     vpu_s: float
+    # KV operand width the estimate was scored at (== itemsize unless
+    # the precision sweep picked a narrower one; DESIGN.md §5)
+    kv_itemsize: int = 2
 
 
 def _causal_fraction(n_q: int, n_kv: int, blk_q: int, blk_kv: int) -> float:
@@ -59,9 +63,17 @@ def _causal_fraction(n_q: int, n_kv: int, blk_q: int, blk_kv: int) -> float:
 
 
 def _score(method: str, blk_q: int, blk_kv: int, *, b_h: int, n_q: int,
-           n_kv: int, e: int, itemsize: int,
-           causal: bool = False) -> tuple[float, float, float]:
-    """(mxu_s, hbm_s, vpu_s) for the whole attention call."""
+           n_kv: int, e: int, itemsize: int, causal: bool = False,
+           kv_itemsize: int | None = None) -> tuple[float, float, float]:
+    """(mxu_s, hbm_s, vpu_s) for the whole attention call.
+
+    ``kv_itemsize`` prices a quantized KV operand (DESIGN.md §5): the
+    K/V HBM terms shrink to the narrow width (plus fp32 per-row scale
+    side-traffic) while the VPU pays two extra dequant multiply passes
+    over the score rows — so the scorer can rank precisions against
+    block shapes on the same max-of-streams objective.
+    """
+    kv_item = itemsize if kv_itemsize is None else kv_itemsize
     frac = _causal_fraction(n_q, n_kv, blk_q, blk_kv) if causal else 1.0
     flops = 4.0 * b_h * n_q * n_kv * e * frac  # QK^T + PV, pruned tiles only
     mxu = flops / MXU_FLOPS
@@ -71,24 +83,43 @@ def _score(method: str, blk_q: int, blk_kv: int, *, b_h: int, n_q: int,
     # never visits dead tiles — gets the VPU pruning win.
     vpu_frac = frac if method == "flash" else 1.0
     vpu = 6.0 * b_h * n_q * n_kv * vpu_frac / VPU_FLOPS
+    if kv_item < itemsize:
+        # in-kernel dequant: K scales on the score tile + V fold into P
+        vpu += 2.0 * b_h * n_q * n_kv * vpu_frac / VPU_FLOPS
     # HBM traffic: Q/O once; K/V per Q block unless resident
     qo = 2 * b_h * n_q * e * itemsize
+    kv_row_bytes = e * kv_item + (4 if kv_item < itemsize else 0)
     if method == "mas_resident":
-        kv = 2 * b_h * n_kv * e * itemsize  # pinned once: no pruning win
+        kv = 2 * b_h * n_kv * kv_row_bytes  # pinned once: no pruning win
     else:
         # streamed / flash: K/V re-fetched per Q row block, but a causal
         # block only fetches its intersecting tiles (clamped index maps).
-        kv = 2 * b_h * n_kv * e * itemsize * -(-n_q // blk_q) * frac
+        kv = 2 * b_h * n_kv * kv_row_bytes * -(-n_q // blk_q) * frac
     hbm = (qo + kv) / HBM_BW
     return mxu, hbm, vpu
 
 
+@functools.lru_cache(maxsize=1024)
 def tune_attention(*, b_h: int, n_q: int, n_kv: int, e: int,
                    itemsize: int = 2,
                    vmem_budget: int = DEFAULT_VMEM_BUDGET,
-                   causal: bool = False) -> KernelChoice:
+                   causal: bool = False,
+                   kv_itemsizes: tuple[int, ...] | None = None
+                   ) -> KernelChoice:
     """Grid search over MXU-aligned block shapes; Mosaic overlaps the
-    MXU/VPU/DMA streams, so cost = max of the three + ramp."""
+    MXU/VPU/DMA streams, so cost = max of the three + ramp.
+
+    ``kv_itemsizes`` adds KV precision to the grid (e.g. ``(2, 1)``
+    ranks bf16 against int8 KV alongside the block shapes); the default
+    scores the native width only. A narrow winner is a *planning*
+    signal for the KV-cache serving path (the decode kernels and cache
+    layouts of DESIGN.md §5) — the prefill kernels themselves take
+    full-width K/V, so don't feed ``kv_itemsize < itemsize`` choices
+    back into `ops.attention` dispatch. Results are LRU-memoized on the
+    full (shapes, dtype, flags) key — dispatch sites hit the analytical
+    grid search once per distinct shape instead of on every call.
+    """
+    kv_widths = (itemsize,) if kv_itemsizes is None else kv_itemsizes
     best: KernelChoice | None = None
     for blk_q in (64, 128, 256, 512):
         if blk_q > n_q:
@@ -101,17 +132,19 @@ def tune_attention(*, b_h: int, n_q: int, n_kv: int, e: int,
                 tiling=TilingConfig(blk_q, blk_kv, True),
                 vmem_budget=vmem_budget, causal=causal,
             )
-            mxu, hbm, vpu = _score(
-                d.method, d.tiling.blk_q, blk_kv, b_h=b_h, n_q=n_q,
-                n_kv=n_kv, e=e, itemsize=itemsize, causal=d.causal,
-            )
-            # pipeline ramp: one DMA of a K/V tile + one MXU tile pass
-            ramp = (2 * blk_kv * e * itemsize) / HBM_BW
-            est = max(mxu, hbm, vpu) + ramp
-            cand = KernelChoice(d.method, TilingConfig(
-                d.tiling.blk_q, blk_kv, d.tiling.kv_resident
-            ), est, mxu, hbm, vpu)
-            if best is None or cand.est_seconds < best.est_seconds:
-                best = cand
+            for kv_item in kv_widths:
+                mxu, hbm, vpu = _score(
+                    d.method, d.tiling.blk_q, blk_kv, b_h=b_h, n_q=n_q,
+                    n_kv=n_kv, e=e, itemsize=itemsize, causal=d.causal,
+                    kv_itemsize=kv_item,
+                )
+                # pipeline ramp: one DMA of a K/V tile + one MXU tile pass
+                ramp = (2 * blk_kv * e * kv_item) / HBM_BW
+                est = max(mxu, hbm, vpu) + ramp
+                cand = KernelChoice(d.method, TilingConfig(
+                    d.tiling.blk_q, blk_kv, d.tiling.kv_resident
+                ), est, mxu, hbm, vpu, kv_itemsize=kv_item)
+                if best is None or cand.est_seconds < best.est_seconds:
+                    best = cand
     assert best is not None, "no feasible block shape"
     return best

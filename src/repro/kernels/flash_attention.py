@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.common import NEG_INF, causal_tile_mask
 
 
 def _flash_kernel(
@@ -71,17 +71,23 @@ def _flash_kernel(
                 need_mask = jnp.logical_or(need_mask, col0 + blk_kv > kv_len)
 
             def _masked(s):
-                rows = jax.lax.broadcasted_iota(
-                    jnp.int32, (blk_q, blk_kv), 0) + row0
-                cols = jax.lax.broadcasted_iota(
-                    jnp.int32, (blk_q, blk_kv), 1) + col0
-                mask = jnp.ones((blk_q, blk_kv), dtype=bool)
+                # One fused select: all active conditions AND into a
+                # single mask before the where.
+                mask = None
                 if causal or window is not None:
-                    mask = cols <= rows
+                    mask = causal_tile_mask(blk_q, blk_kv, row0, col0)
                 if window is not None:
+                    rows = jax.lax.broadcasted_iota(
+                        jnp.int32, (blk_q, blk_kv), 0) + row0
+                    cols = jax.lax.broadcasted_iota(
+                        jnp.int32, (blk_q, blk_kv), 1) + col0
                     mask = jnp.logical_and(mask, cols > rows - window)
                 if kv_len is not None:
-                    mask = jnp.logical_and(mask, cols < kv_len)
+                    cols = jax.lax.broadcasted_iota(
+                        jnp.int32, (blk_q, blk_kv), 1) + col0
+                    live = cols < kv_len
+                    mask = live if mask is None else jnp.logical_and(
+                        mask, live)
                 return jnp.where(mask, s, NEG_INF)
 
             s = jax.lax.cond(need_mask, _masked, lambda s: s, s)

@@ -39,27 +39,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
-
-
-def _causal_tile_mask(blk_q: int, blk_kv: int, row0, col0):
-    rows = jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 0) + row0
-    cols = jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 1) + col0
-    return cols <= rows
-
-
-def _causal_tile_bounds(iq, blk_q: int, blk_kv: int, nkv: int):
-    """(n_full, n_needed) KV-tile counts for Q row block ``iq``.
-
-    Tiles [0, n_full) lie strictly below the causal diagonal (every
-    element visible — no in-tile mask needed); tiles [n_full, n_needed)
-    straddle the diagonal (in-tile mask); tiles [n_needed, nkv) are fully
-    masked and are never computed, fetched, or accumulated (DESIGN.md §3).
-    """
-    row0 = iq * blk_q
-    n_full = jnp.minimum((row0 + 1) // blk_kv, nkv)
-    n_needed = jnp.minimum((row0 + blk_q - 1) // blk_kv + 1, nkv)
-    return n_full, n_needed
+from repro.kernels.common import (
+    NEG_INF,
+    causal_tile_bounds as _causal_tile_bounds,
+    causal_tile_mask as _causal_tile_mask,
+    mask_kv_tail,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -91,9 +76,7 @@ def _mas_resident_kernel(
             m = _causal_tile_mask(blk_q, blk_kv, iq * blk_q, j * blk_kv)
             s = jnp.where(m, s, NEG_INF)
         if kv_len is not None:
-            cols = jax.lax.broadcasted_iota(
-                jnp.int32, (blk_q, blk_kv), 1) + j * blk_kv
-            s = jnp.where(cols < kv_len, s, NEG_INF)
+            s = mask_kv_tail(s, j * blk_kv, kv_len)
         s_ref[:, pl.ds(j * blk_kv, blk_kv)] = s
 
     jax.lax.fori_loop(0, n_full, lambda j, c: (s_body(j, False), c)[1], 0)
@@ -167,9 +150,7 @@ def _mas_streamed_kernel(
 
             s = jax.lax.cond(j >= n_full, _mask, lambda x: x, s)
         if kv_len is not None:
-            cols = jax.lax.broadcasted_iota(
-                jnp.int32, (blk_q, blk_kv), 1) + j * blk_kv
-            s = jnp.where(cols < kv_len, s, NEG_INF)
+            s = mask_kv_tail(s, j * blk_kv, kv_len)
         s_ref[:, pl.ds(j * blk_kv, blk_kv)] = s
 
     @pl.when(j == nkv)

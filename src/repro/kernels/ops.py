@@ -131,12 +131,14 @@ def attention(
 )
 def decode_attention(
     q: jax.Array,  # (B, Hq, E)
-    k_cache: jax.Array,  # (B, Hkv, S, E)
+    k_cache: jax.Array,  # (B, Hkv, S, E) — compute dtype, or int8
     v_cache: jax.Array,  # (B, Hkv, S, E)
     kv_len: jax.Array | int,
     *,
     sm_scale: float | None = None,
     blk_kv: int = 512,
+    k_scale: jax.Array | None = None,  # (B, Hkv, S) fp32 per-row scales
+    v_scale: jax.Array | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Single-token decode against a (partially filled) KV cache."""
@@ -153,12 +155,19 @@ def decode_attention(
     qg = _pad_to(qg, 2, g_pad).reshape(b * hkv, g_pad, e)
     kf = k_cache.reshape(b * hkv, s_len, e)
     vf = v_cache.reshape(b * hkv, s_len, e)
+    # The K/V tile's sublane dim is blk rows of the *cache* dtype: int8
+    # needs 32-row multiples (handled by the 128 lane round-up below).
     blk = -(-min(blk_kv, s_len) // 128) * 128
     kf = _pad_to(kf, 1, blk)
     vf = _pad_to(vf, 1, blk)
+    ks = vs = None
+    if k_scale is not None:
+        ks = _pad_to(k_scale.reshape(b * hkv, s_len), 1, blk)
+        vs = _pad_to(v_scale.reshape(b * hkv, s_len), 1, blk)
 
     of = decode_attention_flat(
-        qg, kf, vf, kv_len, blk_kv=blk, sm_scale=sm_scale, interpret=interp
+        qg, kf, vf, kv_len, blk_kv=blk, sm_scale=sm_scale,
+        k_scale=ks, v_scale=vs, interpret=interp,
     )
     return of[:, :group].reshape(b, hq, e)
 
@@ -172,6 +181,8 @@ def paged_decode_attention(
     kv_lens: jax.Array,     # (B,) int32
     *,
     sm_scale: float | None = None,
+    k_scales: jax.Array | None = None,  # (Hkv, P) fp32 per-page scales
+    v_scales: jax.Array | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Single-token decode against a block-table paged KV cache."""
@@ -181,16 +192,21 @@ def paged_decode_attention(
     group = hq // hkv
     interp = _default_interpret(interpret)
 
-    sub = _sublane_multiple(q.dtype)
-    assert page_size % sub == 0, (
-        f"page_size {page_size} must be a multiple of the {sub}-row "
-        f"sublane tile for {q.dtype}"
-    )
-    g_pad = max(group, sub)
+    if not interp:
+        # Page rows are the K/V block's sublane dim: the tile constraint
+        # follows the *pool* dtype (int8 -> 32). Interpret mode has no
+        # tiling, so small CPU test pages stay allowed.
+        sub_kv = _sublane_multiple(k_pages.dtype)
+        assert page_size % sub_kv == 0, (
+            f"page_size {page_size} must be a multiple of the {sub_kv}-row "
+            f"sublane tile for {k_pages.dtype}"
+        )
+    g_pad = max(group, _sublane_multiple(q.dtype))
     qg = _pad_to(q.reshape(b, hkv, group, e), 2, g_pad)
 
     of = paged_decode_attention_flat(
         qg, k_pages, v_pages, page_table, kv_lens,
-        sm_scale=sm_scale, interpret=interp,
+        sm_scale=sm_scale, k_scales=k_scales, v_scales=v_scales,
+        interpret=interp,
     )
     return of[:, :, :group].reshape(b, hq, e)

@@ -10,13 +10,22 @@ page. The page table and per-sequence lengths ride the
 pages each sequence owns — a gather expressed entirely through block
 index maps, with no dense copy of the cache.
 
+Quantized pools (DESIGN.md §5): when ``k_scales``/``v_scales`` are
+given, the pools are int8 and each physical page carries one fp32
+symmetric-absmax scale per kv head. The scale tables are *scalar
+prefetch* operands too — one scalar per page, read from SMEM through
+the same ``table_ref`` indirection the index maps use — so the page DMA
+moves 1/2–1/4 the bytes and the dequant lands on the VEC stream as a
+scalar multiply of the (G, page) score tile (K) and of P (V).
+
 Grid = (B, Hkv, max_pages); the page dimension is innermost so the
 online max/sum combine accumulates in scratch across pages. Dead pages
 (``j`` past a sequence's last live page) clamp their index map to the
 last live page, so consecutive dead steps revisit the same block and
 issue no DMA (mirrors the causal clamping of DESIGN.md §3).
 
-q pre-grouped to (B, Hkv, G, E) by ops.py; pools are (Hkv, P, page, E).
+q pre-grouped to (B, Hkv, G, E) by ops.py; pools are (Hkv, P, page, E);
+scale tables are (Hkv, P) fp32.
 """
 
 from __future__ import annotations
@@ -28,14 +37,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.common import NEG_INF, mask_kv_tail
 
 
 def _paged_decode_kernel(
-    kvlens_ref, table_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-    acc_ref, *, page_size, n_pages, sm_scale
+    kvlens_ref, table_ref, *refs, page_size, n_pages, sm_scale, quantized
 ):
+    if quantized:
+        (ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
+    h = pl.program_id(1)
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -55,15 +69,19 @@ def _paged_decode_kernel(
             q, k_page, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         ) * sm_scale
-        g = q.shape[0]
-        cols = jax.lax.broadcasted_iota(jnp.int32, (g, page_size), 1) + col0
-        s = jnp.where(cols < kv_len, s, NEG_INF)
+        if quantized:
+            # per-page scales from SMEM, through the same page-table
+            # indirection the index maps use (scalar-prefetch path)
+            s = s * ks_ref[h, table_ref[b, j]]
+        s = mask_kv_tail(s, col0, kv_len)
 
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        if quantized:
+            p = p * vs_ref[h, table_ref[b, j]]
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
             p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -85,14 +103,18 @@ def paged_decode_attention_flat(
     kv_lens: jax.Array,     # (B,) int32 live tokens per sequence
     *,
     sm_scale: float | None = None,
+    k_scales: jax.Array | None = None,  # (Hkv, P) fp32 per-page scales
+    v_scales: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     b, hkv, g, e = q.shape
     _, _, page_size, _ = k_pages.shape
     n_pages = page_table.shape[1]
+    quantized = k_scales is not None
+    assert (v_scales is None) == (k_scales is None)
     scale = (e**-0.5) if sm_scale is None else sm_scale
 
-    def kv_index(b_, h, j, kvlens_ref, table_ref):
+    def kv_index(b_, h, j, kvlens_ref, table_ref, *_):
         # Clamp dead pages to the last live one: repeated block indices
         # issue no DMA. Sequences with kv_len == 0 read table slot 0
         # (the pool's reserved scratch page) and compute nothing.
@@ -101,11 +123,16 @@ def paged_decode_attention_flat(
 
     kernel = functools.partial(
         _paged_decode_kernel, page_size=page_size, n_pages=n_pages,
-        sm_scale=scale,
+        sm_scale=scale, quantized=quantized,
     )
+    scalars = [jnp.asarray(kv_lens, jnp.int32),
+               jnp.asarray(page_table, jnp.int32)]
+    if quantized:
+        scalars += [jnp.asarray(k_scales, jnp.float32),
+                    jnp.asarray(v_scales, jnp.float32)]
     grid = (b, hkv, n_pages)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(scalars),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, g, e), lambda b_, h, j, *_: (b_, h, 0, 0)),
@@ -130,8 +157,4 @@ def paged_decode_attention_flat(
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, e), q.dtype),
         interpret=interpret,
         **kwargs,
-    )(
-        jnp.asarray(kv_lens, jnp.int32),
-        jnp.asarray(page_table, jnp.int32),
-        q, k_pages, v_pages,
-    )
+    )(*scalars, q, k_pages, v_pages)

@@ -59,13 +59,18 @@ class Model:
 
 def build_model(cfg: ArchConfig) -> Model:
     def make_cache(batch, max_len, mem_len=0, *, cache_layout="dense",
-                   page_size=16, num_pages=None):
+                   page_size=16, num_pages=None, kv_dtype=None):
+        # kv_dtype="int8" stores quantized K/V with fp32 scale
+        # side-tables in either layout (DESIGN.md §5).
+        kv_dt = jnp.dtype(kv_dtype) if kv_dtype is not None else None
         if cache_layout == "paged":
             if num_pages is None:
                 # one scratch page (id 0) + full residency for the batch
                 num_pages = batch * -(-max_len // page_size) + 1
-            return tfm.make_paged_cache(cfg, num_pages, page_size)
-        return tfm.make_cache(cfg, batch, max_len, mem_len=mem_len)
+            return tfm.make_paged_cache(cfg, num_pages, page_size,
+                                        kv_dtype=kv_dt)
+        return tfm.make_cache(cfg, batch, max_len, mem_len=mem_len,
+                              kv_dtype=kv_dt)
 
     return Model(
         cfg=cfg,

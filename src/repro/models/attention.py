@@ -25,8 +25,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as kref
 from repro.kernels import ops as kops
-
-NEG_INF = -1e30
+from repro.kernels.common import NEG_INF
 
 
 def _repeat_kv(x, n_rep):
@@ -120,24 +119,30 @@ def attention(q, k, v, *, impl="xla", causal=True, window=None, q_offset=0,
 
 
 def decode_attention(q, k_cache, v_cache, kv_len, *, impl="xla",
-                     cache_layout="dense", page_table=None):
+                     cache_layout="dense", page_table=None,
+                     k_scale=None, v_scale=None):
     """q: (B, Hq, E) against caches (B, Hkv, S, E), masked at kv_len.
 
     ``cache_layout="paged"`` reinterprets the caches as global page
     pools (Hkv, P, page, E) addressed through ``page_table`` with
     per-sequence ``kv_len`` (B,) — the serving engine's block-table
-    layout.
+    layout. ``k_scale``/``v_scale`` mark an int8 cache (DESIGN.md §5):
+    per-row (B, Hkv, S) fp32 scales for the dense layout, per-page
+    (Hkv, P) for the paged one.
     """
     if cache_layout == "paged":
         return paged_decode_attention(q, k_cache, v_cache, page_table,
-                                      kv_len, impl=impl)
+                                      kv_len, impl=impl,
+                                      k_scales=k_scale, v_scales=v_scale)
     if impl == "pallas":
-        return kops.decode_attention(q, k_cache, v_cache, kv_len)
-    return sharded_decode_attention(q, k_cache, v_cache, kv_len)
+        return kops.decode_attention(q, k_cache, v_cache, kv_len,
+                                     k_scale=k_scale, v_scale=v_scale)
+    return sharded_decode_attention(q, k_cache, v_cache, kv_len,
+                                    k_scale=k_scale, v_scale=v_scale)
 
 
 def paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens, *,
-                           impl="xla"):
+                           impl="xla", k_scales=None, v_scales=None):
     """Single-token decode over a block-table paged KV cache.
 
     q: (B, Hq, E); pools: (Hkv, P, page, E); page_table: (B, max_pages)
@@ -146,11 +151,16 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens, *,
     gathers the pool into the dense per-sequence layout and runs the
     same fp32 masked softmax as ``sharded_decode_attention`` (kept
     op-for-op identical so batched greedy argmax agrees between the
-    dense wave engine and the paged continuous engine).
+    dense wave engine and the paged continuous engine). Int8 pools
+    carry per-page fp32 ``k_scales``/``v_scales`` (Hkv, P); the twin
+    applies them exactly where the kernel does — K scales on the score
+    columns after the QK^T, V scales folded into P after the normalizer
+    sum — so parity holds for quantized caches too.
     """
     if impl == "pallas":
         return kops.paged_decode_attention(q, k_pages, v_pages, page_table,
-                                           kv_lens)
+                                           kv_lens, k_scales=k_scales,
+                                           v_scales=v_scales)
     b, hq, e = q.shape
     hkv, _, page, _ = k_pages.shape
     g = hq // hkv
@@ -162,16 +172,27 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens, *,
     scale = e**-0.5
     sc = jnp.einsum("bkge,bkse->bkgs", qg.astype(jnp.float32),
                     k.astype(jnp.float32)) * scale
+
+    def per_position(scales):
+        # (Hkv, P) per-page scales -> (B, Hkv, S) per-position factors
+        gathered = jnp.moveaxis(scales[:, page_table], 0, 1)
+        return jnp.repeat(gathered, page, axis=-1)
+
+    if k_scales is not None:
+        sc = sc * per_position(k_scales)[:, :, None, :]
     mask = jnp.arange(s)[None, None, None, :] < kv_lens[:, None, None, None]
     sc = jnp.where(mask, sc, NEG_INF)
     m = jnp.max(sc, axis=-1, keepdims=True)
     p = jnp.exp(sc - m)
     l = jnp.sum(p, axis=-1, keepdims=True)
+    if v_scales is not None:
+        p = p * per_position(v_scales)[:, :, None, :]
     o = jnp.einsum("bkgs,bkse->bkge", p, v.astype(jnp.float32))
     return (o / l).reshape(b, hq, e).astype(q.dtype)
 
 
-def sharded_decode_attention(q, k_cache, v_cache, kv_len):
+def sharded_decode_attention(q, k_cache, v_cache, kv_len, *,
+                             k_scale=None, v_scale=None):
     """Distributed flash-decode (§Perf iter 2a).
 
     The cache is sequence-sharded over 'model'; instead of letting XLA
@@ -198,6 +219,10 @@ def sharded_decode_attention(q, k_cache, v_cache, kv_len):
     scale = e**-0.5
     sc = jnp.einsum("bkge,bkse->bkgs", qg.astype(jnp.float32),
                     k.astype(jnp.float32)) * scale
+    if k_scale is not None:
+        # int8 cache: per-row fp32 scales dequantize the score columns
+        # (same op order as the decode kernel — after QK^T and sm_scale)
+        sc = sc * k_scale[:, :, None, :]
     sc = ctx.constrain(
         sc, lambda axes: P(ctx.batch_axes(), None, None,
                            "model" if "model" in axes else None)
@@ -208,5 +233,7 @@ def sharded_decode_attention(q, k_cache, v_cache, kv_len):
     m = jnp.max(sc, axis=-1, keepdims=True)
     p = jnp.exp(sc - m)
     l = jnp.sum(p, axis=-1, keepdims=True)
+    if v_scale is not None:
+        p = p * v_scale[:, :, None, :]
     o = jnp.einsum("bkgs,bkse->bkge", p, v.astype(jnp.float32))
     return (o / l).reshape(b, hq, e).astype(q.dtype)

@@ -18,6 +18,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import quantize_q8
 from repro.models import attention as attn_mod
 from repro.models.common import (
     ArchConfig,
@@ -141,49 +142,106 @@ def attn_block(params, x, cfg: ArchConfig, *, positions, window=None,
 
 
 def attn_decode(params, x, cfg: ArchConfig, *, cache_k, cache_v, pos,
-                window=None):
+                window=None, k_scale=None, v_scale=None):
     """One-token self-attention against a (ring) cache.
 
-    x: (B, 1, D); cache_[kv]: (B, Hkv, C, E); pos: scalar absolute position.
-    Returns (out, (new_k, new_v)).
+    x: (B, 1, D); cache_[kv]: (B, Hkv, C, E); pos: scalar absolute
+    position. An int8 cache carries per-row (B, Hkv, C) fp32
+    ``k_scale``/``v_scale``: the new token's row is quantized with its
+    own absmax scale at append time (rows are written once, so no
+    requantization is ever needed on this layout). Returns
+    (out, cache updates dict).
     """
     c = cache_k.shape[2]
     q, k, v = _qkv(params, x, cfg, positions=pos + jnp.zeros((1,), jnp.int32))
     slot = pos % c if window is not None else pos
+    quantized = cache_k.dtype == jnp.int8
+    if quantized:
+        k, ks = quantize_q8(k, -1)
+        v, vs = quantize_q8(v, -1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, slot,
+                                                      axis=2)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, slot,
+                                                      axis=2)
     cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=2)
     cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=2)
     kv_len = jnp.minimum(pos + 1, c)
     o = attn_mod.decode_attention(
         q[:, :, 0], cache_k, cache_v, kv_len,
         impl="pallas" if cfg.attn_impl == "pallas" else "xla",
+        k_scale=k_scale, v_scale=v_scale,
     )
+    updates = {"k": cache_k, "v": cache_v}
+    if quantized:
+        updates.update(k_scale=k_scale, v_scale=v_scale)
     return (o.reshape(x.shape[0], 1, -1) @ params["wo"].astype(x.dtype),
-            (cache_k, cache_v))
+            updates)
+
+
+def _paged_append_requant(pages, scales, page_ids, slots, row):
+    """Append one quantized token row per sequence (DESIGN.md §5).
+
+    pages: (Hkv, P, page, E) int8; scales: (Hkv, P) fp32; page_ids /
+    slots: (B,); row: (Hkv, B, E) at compute precision. The touched
+    page's *live* rows ([0, slot)) are dequantized, the new row is
+    inserted, and the page is requantized under a fresh symmetric
+    absmax — so the per-page scale always reflects exactly the rows
+    written so far. Stale rows (>= slot: reused pages keep their old
+    bytes until overwritten) are masked out of both the absmax and the
+    rewrite, which is what makes freed-page reuse safe without any
+    scale reset. While the scale is unchanged the dequant/requant
+    round-trip is exact (round(v*s/s) == v), so old rows only pay one
+    rounding error per scale growth.
+    """
+    hkv, _, page, e = pages.shape
+    bsz = page_ids.shape[0]
+    sc = scales[:, page_ids]                                   # (Hkv, B)
+    pg = pages[:, page_ids].astype(jnp.float32) * sc[:, :, None, None]
+    live = jnp.arange(page)[None, :] < slots[:, None]          # (B, page)
+    pg = jnp.where(live[None, :, :, None], pg, 0.0)
+    pg = pg.at[:, jnp.arange(bsz), slots].set(row.astype(jnp.float32))
+    q, new_sc = quantize_q8(pg, (-2, -1))
+    return pages.at[:, page_ids].set(q), scales.at[:, page_ids].set(new_sc)
 
 
 def attn_paged_decode(params, x, cfg: ArchConfig, *, k_pages, v_pages,
-                      page_table, positions):
+                      page_table, positions, k_scales=None, v_scales=None):
     """One-token self-attention against a paged (block-table) cache.
 
     x: (B, 1, D); pools: (Hkv, P, page, E); page_table: (B, max_pages);
     positions: (B,) per-sequence absolute positions — unlike the dense
     path there is no shared scalar `pos`, which is what lets the
     continuous-batching engine decode sequences of different ages in
-    one batch. Returns (out, (new_k_pages, new_v_pages)).
+    one batch. Int8 pools carry per-page (Hkv, P) fp32 scale tables and
+    append through ``_paged_append_requant``. Returns
+    (out, pool updates dict).
     """
     b = x.shape[0]
     page = k_pages.shape[2]
     q, k, v = _qkv(params, x, cfg, positions=positions[:, None, None])
     page_ids = page_table[jnp.arange(b), positions // page]
     slots = positions % page
-    k_pages = k_pages.at[:, page_ids, slots].set(k[:, :, 0].transpose(1, 0, 2))
-    v_pages = v_pages.at[:, page_ids, slots].set(v[:, :, 0].transpose(1, 0, 2))
+    k_row = k[:, :, 0].transpose(1, 0, 2)   # (Hkv, B, E)
+    v_row = v[:, :, 0].transpose(1, 0, 2)
+    quantized = k_pages.dtype == jnp.int8
+    if quantized:
+        k_pages, k_scales = _paged_append_requant(k_pages, k_scales,
+                                                  page_ids, slots, k_row)
+        v_pages, v_scales = _paged_append_requant(v_pages, v_scales,
+                                                  page_ids, slots, v_row)
+    else:
+        k_pages = k_pages.at[:, page_ids, slots].set(k_row)
+        v_pages = v_pages.at[:, page_ids, slots].set(v_row)
     o = attn_mod.paged_decode_attention(
         q[:, :, 0], k_pages, v_pages, page_table, positions + 1,
         impl="pallas" if cfg.attn_impl == "pallas" else "xla",
+        k_scales=k_scales, v_scales=v_scales,
     )
+    updates = {"k": k_pages, "v": v_pages}
+    if quantized:
+        updates.update(k_scale=k_scales, v_scale=v_scales)
     return (o.reshape(b, 1, -1) @ params["wo"].astype(x.dtype),
-            (k_pages, v_pages))
+            updates)
 
 
 def cross_attn_block(params, x, cfg: ArchConfig, *, mem_k, mem_v):
@@ -221,15 +279,26 @@ def init_block(key, kind: str, cfg: ArchConfig, *, with_cross=False):
 
 
 def make_cache_block(kind: str, cfg: ArchConfig, batch: int, max_len: int,
-                     dtype, *, with_cross=False, mem_len: int = 0):
-    """Zero-initialized cache pytree for one block."""
+                     dtype, *, with_cross=False, mem_len: int = 0,
+                     kv_dtype=None):
+    """Zero-initialized cache pytree for one block.
+
+    ``kv_dtype=jnp.int8`` stores the self-attention K/V quantized with
+    per-row fp32 scale side-tables (DESIGN.md §5); cross-attention
+    memories stay at the compute dtype (written once, read every step).
+    """
     e = cfg.hd
     if kind == "attn":
         c = min(max_len, cfg.window) if cfg.window else max_len
+        kv_dt = kv_dtype or dtype
         blk: dict[str, Any] = {
-            "k": jnp.zeros((batch, cfg.num_kv_heads, c, e), dtype),
-            "v": jnp.zeros((batch, cfg.num_kv_heads, c, e), dtype),
+            "k": jnp.zeros((batch, cfg.num_kv_heads, c, e), kv_dt),
+            "v": jnp.zeros((batch, cfg.num_kv_heads, c, e), kv_dt),
         }
+        if jnp.dtype(kv_dt) == jnp.int8:
+            zs = jnp.zeros((batch, cfg.num_kv_heads, c), jnp.float32)
+            blk["k_scale"] = zs
+            blk["v_scale"] = zs
         if with_cross:
             blk["mem_k"] = jnp.zeros((batch, cfg.num_kv_heads, mem_len, e),
                                      dtype)
@@ -290,10 +359,12 @@ def apply_block_decode(params, kind, x, cfg: ArchConfig, cache, pos):
         x = x + y
         return x + mlp(params["ffn"], x, cfg), {"conv": conv, "rnn": rnn}
     window = cfg.window if cfg.block_pattern is not None else None
-    y, (k, v) = attn_decode(params["attn"], x, cfg, cache_k=cache["k"],
-                            cache_v=cache["v"], pos=pos, window=window)
+    y, kv_updates = attn_decode(params["attn"], x, cfg, cache_k=cache["k"],
+                                cache_v=cache["v"], pos=pos, window=window,
+                                k_scale=cache.get("k_scale"),
+                                v_scale=cache.get("v_scale"))
     x = x + y
-    new_cache = dict(cache, k=k, v=v)
+    new_cache = dict(cache, **kv_updates)
     if "cross" in params:
         x = x + cross_attn_block(params["cross"], x, cfg,
                                  mem_k=cache["mem_k"], mem_v=cache["mem_v"])
@@ -477,7 +548,8 @@ def _block_with_cross(p, x, cfg, positions, mem):
 # ---------------------------------------------------------------------------
 
 
-def make_cache(cfg: ArchConfig, batch: int, max_len: int, *, mem_len=0):
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, *, mem_len=0,
+               kv_dtype=None):
     pattern, num_units, tail = unit_layout(cfg)
     with_cross = cfg.encoder_layers > 0
 
@@ -486,6 +558,7 @@ def make_cache(cfg: ArchConfig, batch: int, max_len: int, *, mem_len=0):
             f"b{j}": make_cache_block(
                 kind, cfg, batch, max_len, cfg.compute_dtype,
                 with_cross=with_cross and kind == "attn", mem_len=mem_len,
+                kv_dtype=kv_dtype,
             )
             for j, kind in enumerate(pattern)
         }
@@ -501,6 +574,7 @@ def make_cache(cfg: ArchConfig, batch: int, max_len: int, *, mem_len=0):
             f"t{j}": make_cache_block(
                 kind, cfg, batch, max_len, cfg.compute_dtype,
                 with_cross=with_cross and kind == "attn", mem_len=mem_len,
+                kv_dtype=kv_dtype,
             )
             for j, kind in enumerate(tail)
         }
@@ -517,21 +591,28 @@ def _check_paged_support(cfg: ArchConfig):
         )
 
 
-def make_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int):
+def make_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int,
+                     kv_dtype=None):
     """Global page pools, one (Hkv, P, page, E) pair per scanned unit.
 
     The page table is NOT part of this pytree: one table row per
     sequence is shared by every layer (a logical page maps to the same
     physical slot in all pools), so it travels as a decode-step argument
-    instead.
+    instead. ``kv_dtype=jnp.int8`` adds the per-page fp32 scales
+    side-table (Hkv, P) for K and V (DESIGN.md §5).
     """
     _check_paged_support(cfg)
     _, num_units, _ = unit_layout(cfg)
-    z = jnp.zeros((cfg.num_kv_heads, num_pages, page_size, cfg.hd),
-                  cfg.compute_dtype)
+    kv_dt = kv_dtype or cfg.compute_dtype
+    z = jnp.zeros((cfg.num_kv_heads, num_pages, page_size, cfg.hd), kv_dt)
+    blk = {"k": z, "v": z}
+    if jnp.dtype(kv_dt) == jnp.int8:
+        zs = jnp.zeros((cfg.num_kv_heads, num_pages), jnp.float32)
+        blk["k_scale"] = zs
+        blk["v_scale"] = zs
     return {"units": jax.tree.map(
         lambda x: jnp.broadcast_to(x, (num_units,) + x.shape),
-        {"b0": {"k": z, "v": z}},
+        {"b0": blk},
     )}
 
 
@@ -541,20 +622,33 @@ def write_prefill_pages(cfg: ArchConfig, cache, dense_cache, page_ids):
     dense k/v: (U, 1, Hkv, C, E) with C >= len(page_ids) * page_size;
     page_ids: (n_pages,) physical pages allocated to the sequence.
     Positions past the prompt in the last page carry garbage — masked by
-    the per-sequence kv_len at attention time.
+    the per-sequence kv_len at attention time. Int8 pools quantize here,
+    at admit time: one symmetric absmax per (unit, head, page), written
+    into the scales side-table alongside the values (the prompt pages of
+    a reused physical page overwrite both, so freed-page scales never
+    leak into a new sequence).
     """
     n = page_ids.shape[0]
 
-    def write(pages, dense):
+    def chunked(pages, dense):
         u, h, _, page, e = pages.shape
-        chunks = dense[:, 0, :, :n * page].reshape(u, h, n, page, e)
-        return pages.at[:, :, page_ids].set(chunks)
+        return dense[:, 0, :, :n * page].reshape(u, h, n, page, e)
 
     units = {}
     for key, blk in cache["units"].items():
         dense_blk = dense_cache["units"][key]
-        units[key] = dict(blk, k=write(blk["k"], dense_blk["k"]),
-                          v=write(blk["v"], dense_blk["v"]))
+        new = dict(blk)
+        for which in ("k", "v"):
+            chunks = chunked(blk[which], dense_blk[which])
+            if blk[which].dtype == jnp.int8:
+                qv, sc = quantize_q8(chunks, (-2, -1))
+                new[which] = blk[which].at[:, :, page_ids].set(qv)
+                new[f"{which}_scale"] = (
+                    blk[f"{which}_scale"].at[:, :, page_ids].set(sc)
+                )
+            else:
+                new[which] = blk[which].at[:, :, page_ids].set(chunks)
+        units[key] = new
     return dict(cache, units=units)
 
 
@@ -568,16 +662,17 @@ def paged_decode_step(params, cfg: ArchConfig, token, cache, page_table,
     def unit_body(x, xs):
         p_unit, c_unit = xs
         p, c = p_unit["b0"], c_unit["b0"]
-        y, (kp, vp) = attn_paged_decode(
+        y, pool_updates = attn_paged_decode(
             p["attn"], x, cfg, k_pages=c["k"], v_pages=c["v"],
             page_table=page_table, positions=positions,
+            k_scales=c.get("k_scale"), v_scales=c.get("v_scale"),
         )
         x = x + y
         if cfg.moe is not None:
             y, _ = moe_ffn(p["ffn"], x, cfg)
         else:
             y = mlp(p["ffn"], x, cfg)
-        return x + y, {"b0": {"k": kp, "v": vp}}
+        return x + y, {"b0": dict(c, **pool_updates)}
 
     x, new_units = jax.lax.scan(unit_body, x,
                                 (params["units"], cache["units"]))
@@ -612,11 +707,13 @@ def decode_step(params, cfg: ArchConfig, token, cache, pos):
 
 
 def prefill(params, cfg: ArchConfig, tokens, max_len, *,
-            frontend_embeds=None, encoder_out=None):
+            frontend_embeds=None, encoder_out=None, kv_dtype=None):
     """Run the full prompt, build the cache -> (last_logits, cache).
 
     Cache is populated by re-running per-block K/V projections; hidden
     states flow through the same scanned units as training.
+    ``kv_dtype=jnp.int8`` builds a quantized cache: prompt K/V rows are
+    quantized per-row at fill time (DESIGN.md §5).
     """
     pattern, num_units, tail = unit_layout(cfg)
     x = _embed(params, tokens, cfg, frontend_embeds)
@@ -639,6 +736,15 @@ def prefill(params, cfg: ArchConfig, tokens, max_len, *,
                 k = jnp.roll(k, shift, axis=2)
                 v = jnp.roll(v, shift, axis=2)
         new = dict(cache_blk)
+        if cache_blk["k"].dtype == jnp.int8:
+            k, ks = quantize_q8(k, -1)
+            v, vs = quantize_q8(v, -1)
+            new["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache_blk["k_scale"], ks, 0, axis=2
+            )
+            new["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache_blk["v_scale"], vs, 0, axis=2
+            )
         new["k"] = jax.lax.dynamic_update_slice_in_dim(
             cache_blk["k"], k, 0, axis=2
         )
@@ -682,7 +788,8 @@ def prefill(params, cfg: ArchConfig, tokens, max_len, *,
         return x, new_c
 
     cache = make_cache(cfg, b, max_len,
-                       mem_len=mem.shape[1] if mem is not None else 0)
+                       mem_len=mem.shape[1] if mem is not None else 0,
+                       kv_dtype=kv_dtype)
     x, new_units = jax.lax.scan(unit_body, x,
                                 (params["units"], cache["units"]))
     new_cache: dict[str, Any] = {"units": new_units}

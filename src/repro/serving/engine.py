@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
-from repro.serving.paged_cache import PagedKVCacheManager
+from repro.serving.paged_cache import PagedKVCacheManager, page_footprint_bytes
 
 
 @dataclasses.dataclass
@@ -36,12 +36,15 @@ class Request:
 
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_len: int = 512,
-                 batch_size: int = 4):
+                 batch_size: int = 4, kv_dtype=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
         self.max_len = max_len
         self.batch_size = batch_size
+        # kv_dtype="int8": prefill builds a quantized dense cache and
+        # decode appends per-row quantized tokens (DESIGN.md §5).
+        self.kv_dtype = jnp.dtype(kv_dtype) if kv_dtype is not None else None
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, model.cfg, t, c, pos)
         )
@@ -49,7 +52,8 @@ class ServingEngine:
         # unjitted prefill re-traces the whole stack every wave and
         # dominates serving wall time.
         self._prefill_fn = jax.jit(
-            lambda p, t: model.prefill(p, model.cfg, t, self.max_len)
+            lambda p, t: model.prefill(p, model.cfg, t, self.max_len,
+                                       kv_dtype=self.kv_dtype)
         )
 
     def _prefill(self, tokens):
@@ -133,18 +137,26 @@ class ContinuousBatchingEngine:
 
     def __init__(self, model: Model, params, *, max_len: int = 512,
                  batch_size: int = 4, page_size: int = 16,
-                 num_pages: int | None = None):
+                 num_pages: int | None = None, kv_dtype=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
         self.max_len = max_len
         self.batch_size = batch_size
         self.page_size = page_size
+        # kv_dtype="int8": the pools store quantized pages + per-page
+        # fp32 scales; prefill stays at compute precision and the
+        # copy-on-admit scatter quantizes whole pages (DESIGN.md §5).
+        self.kv_dtype = (jnp.dtype(kv_dtype) if kv_dtype is not None
+                         else jnp.dtype(model.cfg.compute_dtype))
         self.max_pages = -(-max_len // page_size)
         if num_pages is None:
             num_pages = batch_size * self.max_pages + 1  # + scratch page
         self.num_pages = num_pages
         self.peak_pages_used = 0  # across serve() calls, for benchmarks
+        # per-decode-step pool occupancy of the LAST serve() call, so
+        # benchmark KV-byte claims are auditable over time
+        self.occupancy_log: list[int] = []
         self._decode = jax.jit(
             lambda p, c, t, table, pos: model.paged_decode_step(
                 p, model.cfg, t, c, table, pos
@@ -159,9 +171,11 @@ class ContinuousBatchingEngine:
 
     def kv_bytes_per_page(self) -> int:
         cfg = self.cfg
-        itemsize = jnp.dtype(cfg.compute_dtype).itemsize
-        return (2 * cfg.num_layers * cfg.num_kv_heads * self.page_size
-                * cfg.hd * itemsize)
+        return page_footprint_bytes(
+            num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
+            page_size=self.page_size, head_dim=cfg.hd,
+            kv_dtype=self.kv_dtype,
+        )
 
     def _n_pages(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
@@ -169,9 +183,12 @@ class ContinuousBatchingEngine:
     def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
         B, ps = self.batch_size, self.page_size
         mgr = PagedKVCacheManager(self.num_pages, ps, num_slots=B,
-                                  max_pages_per_seq=self.max_pages)
+                                  max_pages_per_seq=self.max_pages,
+                                  kv_dtype=self.kv_dtype)
         cache = self.model.make_cache(B, self.max_len, cache_layout="paged",
-                                      page_size=ps, num_pages=self.num_pages)
+                                      page_size=ps, num_pages=self.num_pages,
+                                      kv_dtype=self.kv_dtype)
+        self.occupancy_log = []
         queue = deque(requests)
         active: dict[int, Request] = {}
         out: dict[int, list[int]] = {}
@@ -234,6 +251,7 @@ class ContinuousBatchingEngine:
 
         try_admit()
         while active:
+            self.occupancy_log.append(mgr.pages_used)
             logits, cache = self._decode(
                 self.params, cache, jnp.asarray(tokens),
                 jnp.asarray(mgr.table()), jnp.asarray(positions),

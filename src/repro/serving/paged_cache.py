@@ -16,6 +16,18 @@ step write and read harmless garbage there instead of corrupting live
 pages. The free list is LIFO so a freed sequence's pages are reissued
 to the next admit (slot reuse is copy-on-admit: the new request's
 prefilled KV overwrites them).
+
+Quantized pools (``kv_dtype="int8"``, DESIGN.md §5) store int8 pages
+plus a per-page fp32 scales side-table, one symmetric-absmax scale per
+(kv head, physical page) for K and V each. Quantization happens at
+admit time (``write_prefill_pages`` quantizes the scattered prompt
+pages whole) and at append time (``attn_paged_decode`` requantizes the
+touched page's *live* rows, so stale data in reused pages never leaks
+into a scale). This module owns the host-side accounting of that
+layout — ``page_footprint_bytes`` is the per-page DMA/residency cost
+incl. the scales side-traffic — while the device arrays live in the
+model cache pytree. The quantizers themselves are shared with the
+kernels (``repro.kernels.common``) and re-exported here.
 """
 
 from __future__ import annotations
@@ -24,7 +36,24 @@ import dataclasses
 
 import numpy as np
 
+from repro.kernels.common import dequantize_q8, quantize_q8  # noqa: F401
+
 SCRATCH_PAGE = 0
+
+
+def page_footprint_bytes(*, num_layers: int, num_kv_heads: int,
+                         page_size: int, head_dim: int,
+                         kv_dtype="bfloat16") -> int:
+    """Bytes one physical page pins across the whole layer stack.
+
+    K + V values at the pool dtype plus, for int8 pools, the two fp32
+    per-page scales (the side-table the decode kernels prefetch).
+    """
+    itemsize = np.dtype(kv_dtype).itemsize
+    per_layer = 2 * num_kv_heads * page_size * head_dim * itemsize
+    if np.dtype(kv_dtype) == np.int8:
+        per_layer += 2 * num_kv_heads * 4  # K + V fp32 scales
+    return num_layers * per_layer
 
 
 class PagePoolExhausted(RuntimeError):
@@ -52,12 +81,14 @@ class PagedKVCacheManager:
     """
 
     def __init__(self, num_pages: int, page_size: int, *,
-                 num_slots: int, max_pages_per_seq: int):
+                 num_slots: int, max_pages_per_seq: int,
+                 kv_dtype="bfloat16"):
         assert num_pages > 1, "pool needs at least one page beyond scratch"
         self.num_pages = num_pages
         self.page_size = page_size
         self.num_slots = num_slots
         self.max_pages_per_seq = max_pages_per_seq
+        self.kv_dtype = np.dtype(kv_dtype)
         # LIFO free list, scratch page 0 excluded
         self._free = list(range(num_pages - 1, 0, -1))
         self._seqs: dict[int, PagedSeq] = {}

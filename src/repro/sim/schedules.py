@@ -27,12 +27,23 @@ class Tiling:
     hh: int = 1
     nq: int = 64
     nkv: int = 256
+    # KV operand width in bytes — precision as a first-class tiling
+    # factor (§4.2 extended; DESIGN.md §5). None -> workload/device
+    # default; 1 -> int8 KV (+ fp32 scale side-traffic, VEC dequant).
+    kv_bpe: int | None = None
+
+
+def _effective_kv_bpe(w, t: Tiling, hw: HWConfig) -> int:
+    """Searched factor > workload pin > device native, in that order."""
+    return t.kv_bpe or getattr(w, "kv_bpe", None) or hw.bytes_per_elem
 
 
 class _Builder:
     def __init__(self, w: AttentionWorkload, t: Tiling, hw: HWConfig):
         self.w, self.t, self.hw = w, t, hw
         self.bpe = hw.bytes_per_elem
+        self.kv_bpe = _effective_kv_bpe(w, t, hw)
+        self.kv_quant = self.kv_bpe < self.bpe
         self.heads_core = -(-w.heads // hw.cores)
         self.hh = min(t.hh, self.heads_core)
         self.nq = min(t.nq, w.seq)
@@ -88,6 +99,12 @@ class _Builder:
             # compare+select pass over the diagonal-straddling tiles.
             cyc += mask_elems / self.hw.vec_lanes * self.hw.vec_ew_cost
             ops += mask_elems
+        if self.kv_quant:
+            # int8 KV dequant lands on the VEC stream (DESIGN.md §5):
+            # one multiply pass applying the K scales to the score row
+            # and one folding the V scales into P.
+            cyc += 2 * r * n / self.hw.vec_lanes * self.hw.vec_ew_cost
+            ops += 2 * r * n
         l1 = 2 * r * n * self.bpe
         return self._emit(unit="VEC", cycles=cyc, deps=tuple(deps), tag=tag,
                           vec_ops=ops, l1_bytes=l1)
@@ -122,12 +139,18 @@ class _Builder:
         return self.hh * self.nq * self.w.emb * self.bpe
 
     @property
-    def kv_tile_b(self):  # one K or V sub-tile
-        return self.hh * self.nkv * self.w.emb * self.bpe
+    def kv_tile_b(self):  # one K or V sub-tile (+ per-row scales if int8)
+        nbytes = self.hh * self.nkv * self.w.emb * self.kv_bpe
+        if self.kv_quant:
+            nbytes += self.hh * self.nkv * 4  # fp32 per-row scales
+        return nbytes
 
     @property
     def kv_head_b(self):  # full K or V for a head tile
-        return self.hh * self.w.seq * self.w.emb * self.bpe
+        nbytes = self.hh * self.w.seq * self.w.emb * self.kv_bpe
+        if self.kv_quant:
+            nbytes += self.hh * self.w.seq * 4
+        return nbytes
 
     @property
     def row_buf_b(self):  # one C/P row buffer
@@ -455,6 +478,10 @@ def build_fusemax(w, t, hw) -> list[Task] | None:
             # diagonal-straddling tile: one causal compare+select pass
             cyc += r * b.nkv / hw.vec_lanes * hw.vec_ew_cost
             ops += r * b.nkv
+        if b.kv_quant:
+            # int8 dequant: K scales on the score tile + V fold into P
+            cyc += 2 * r * b.nkv / hw.vec_lanes * hw.vec_ew_cost
+            ops += 2 * r * b.nkv
         return b._emit(unit="VEC", cycles=cyc, deps=(c_dep,),
                        tag=f"p{i}.{j}", vec_ops=ops,
                        l1_bytes=2 * r * b.nkv * b.bpe)
@@ -504,19 +531,26 @@ def build_paged_decode(w, t, hw) -> list[Task] | None:
 
     ``t.nkv`` is the PAGE SIZE — the tiling factor the search sweeps —
     and ``t.hh`` the kv-head tile; ``t.nq`` is ignored (the MXU row dim
-    is the fixed GQA group). Per live page: one K-page DMA (descriptor
-    setup + page bytes, partial pages charged whole), a (group x page)
-    QK^T MAC, a fusemax-style partial-softmax VEC pass, one V-page DMA
-    and the PV accumulate — MAC/VEC pipelined across pages exactly like
-    the online-softmax decode kernel.
+    is the fixed GQA group). ``t.kv_bpe`` (or the workload's pin) sets
+    the KV element width: int8 pages halve/quarter the page DMA bytes,
+    add one fp32 scale per page (K and V each) to that DMA, and charge
+    two dequant multiply passes on the VEC stream (DESIGN.md §5). Per
+    live page: one K-page DMA (descriptor setup + page bytes, partial
+    pages charged whole), a (group x page) QK^T MAC, a fusemax-style
+    partial-softmax VEC pass, one V-page DMA and the PV accumulate —
+    MAC/VEC pipelined across pages exactly like the online-softmax
+    decode kernel.
     """
     page = min(t.nkv, w.seq)
     heads_core = -(-w.heads // hw.cores)
     hh = min(t.hh, heads_core)
     bpe = hw.bytes_per_elem
+    kv_bpe = _effective_kv_bpe(w, t, hw)
+    kv_quant = kv_bpe < bpe
     g, e = w.group, w.emb
     # L1: Q + O + double-buffered K/V pages + the (g, page) score tile
-    need = hh * (2 * g * e + 4 * page * e + 2 * g * page) * bpe
+    need = (hh * (2 * g * e + 2 * g * page) * bpe
+            + hh * 4 * page * e * kv_bpe)
     if need > hw.l1_bytes:
         return None
 
@@ -533,7 +567,7 @@ def build_paged_decode(w, t, hw) -> list[Task] | None:
                     deps=tuple(deps), tag=tag, dram_read_bytes=nbytes,
                     l1_bytes=nbytes)
 
-    page_b = hh * page * e * bpe
+    page_b = hh * page * e * kv_bpe + (hh * 4 if kv_quant else 0)
     q_b = hh * g * e * bpe
 
     for s, kv_len in enumerate(w.kv_lens):
@@ -553,9 +587,15 @@ def build_paged_decode(w, t, hw) -> list[Task] | None:
                 cyc = hw.vec_softmax_cycles(r, page) + r * (
                     2 * hw.vec_ew_cost + e / hw.vec_lanes * 2
                 )
+                ops = hw.vec_ops_softmax(r, page) + 2 * r * e
+                if kv_quant:
+                    # dequant on the VEC stream: page scale applied to
+                    # the (g, page) score tile + folded into P
+                    cyc += 2 * r * page / hw.vec_lanes * hw.vec_ew_cost
+                    ops += 2 * r * page
                 pj = emit(unit="VEC", cycles=cyc, deps=(sj,),
                           tag=f"P{s}.{ht}.{j}",
-                          vec_ops=hw.vec_ops_softmax(r, page) + 2 * r * e,
+                          vec_ops=ops,
                           l1_bytes=2 * r * page * bpe)
                 vd = dma_page(page_b, tag=f"V{s}.{ht}.{j}")
                 deps = [pj, vd] + ([prev_acc] if prev_acc is not None else [])
@@ -593,7 +633,9 @@ def tiling_space(w: AttentionWorkload, hw: HWConfig) -> list[Tiling]:
     is the fixed GQA group) and N_KV becomes the page size, extended
     down to 16 rows: decode is DMA-bound, so the optimum balances
     partial-page boundary waste against per-page descriptor overhead
-    and sits well below the prefill sub-tile sizes.
+    and sits well below the prefill sub-tile sizes. The KV element
+    width joins the decode space as a fourth factor (native vs int8):
+    precision is searched exactly like page size (DESIGN.md §5).
     """
     heads_core = -(-w.heads // hw.cores)
     hhs = sorted({h for h in (1, 2, 4, 8, 16) if h <= heads_core}
@@ -601,7 +643,9 @@ def tiling_space(w: AttentionWorkload, hw: HWConfig) -> list[Tiling]:
     if isinstance(w, PagedDecodeWorkload):
         pages = sorted({p for p in (16, 32, 64, 128, 256, 512)
                         if p <= w.seq} | {w.seq})
-        return [Tiling(hh, 1, p) for hh in hhs for p in pages]
+        bpes = sorted({hw.bytes_per_elem, 1})
+        return [Tiling(hh, 1, p, bpe)
+                for hh in hhs for p in pages for bpe in bpes]
     nqs = sorted({n for n in (16, 32, 64, 128, 256) if n <= w.seq} | {w.seq})
     nkvs = sorted({n for n in (64, 128, 256, 512) if n <= w.seq} | {w.seq})
     return [Tiling(hh, nq, nkv) for hh in hhs for nq in nqs for nkv in nkvs]

@@ -69,20 +69,33 @@ def random_search(method, w, hw, iters=200, seed=0, objective="cycles"):
     return _finish(method, w, hw, best_t, iters, history)
 
 
+def _factor_levels(space) -> list[list]:
+    """Per-tier value sets of the tiling space (H_h, N_Q, N_KV, kv_bpe).
+
+    kv_bpe sorts with ``None`` (native precision) first so the level
+    ordering is deterministic for prefill spaces that don't search it.
+    """
+    hhs = sorted({t.hh for t in space})
+    nqs = sorted({t.nq for t in space})
+    nkvs = sorted({t.nkv for t in space})
+    bpes = sorted({t.kv_bpe for t in space},
+                  key=lambda v: (-1 if v is None else v))
+    return [hhs, nqs, nkvs, bpes]
+
+
 def mcts_search(method, w, hw, iters=400, seed=0, c_ucb=1.2,
                 objective="cycles") -> SearchResult:
     """Monte-Carlo tree search over the tiered tiling decisions.
 
     Tree levels mirror the paper's per-loop factor assignment: level 1
-    picks H_h, level 2 picks N_Q, level 3 picks N_KV; rollouts complete
-    the remaining levels uniformly; rewards back-propagate 1/cycles.
+    picks H_h, level 2 picks N_Q, level 3 picks N_KV, level 4 the KV
+    element width (precision as a tiling factor, DESIGN.md §5);
+    rollouts complete the remaining levels uniformly; rewards
+    back-propagate 1/cycles.
     """
     rng = random.Random(seed)
     space = tiling_space(w, hw)
-    hhs = sorted({t.hh for t in space})
-    nqs = sorted({t.nq for t in space})
-    nkvs = sorted({t.nkv for t in space})
-    levels = [hhs, nqs, nkvs]
+    levels = _factor_levels(space)
 
     stats: dict[tuple, list[float]] = {}  # node path -> [visits, total reward]
 
@@ -132,12 +145,10 @@ def ga_search(method, w, hw, iters=400, seed=0, pop=24,
     """
     rng = random.Random(seed)
     space = tiling_space(w, hw)
-    hhs = sorted({t.hh for t in space})
-    nqs = sorted({t.nq for t in space})
-    nkvs = sorted({t.nkv for t in space})
+    levels = _factor_levels(space)
 
     def rand_g():
-        return (rng.choice(hhs), rng.choice(nqs), rng.choice(nkvs))
+        return tuple(rng.choice(lvl) for lvl in levels)
 
     def fitness(g):
         c = _evaluate(method, w, Tiling(*g), hw, objective)
@@ -156,12 +167,14 @@ def ga_search(method, w, hw, iters=400, seed=0, pop=24,
             return population[i] if scores[i] <= scores[j] else population[j]
 
         a, bg = pick(), pick()
-        child = tuple(a[k] if rng.random() < 0.5 else bg[k] for k in range(3))
+        n_genes = len(levels)
+        child = tuple(a[k] if rng.random() < 0.5 else bg[k]
+                      for k in range(n_genes))
         if rng.random() < 0.3:  # mutate one gene
-            k = rng.randrange(3)
+            k = rng.randrange(n_genes)
             child = tuple(
-                rng.choice([hhs, nqs, nkvs][k]) if kk == k else child[kk]
-                for kk in range(3)
+                rng.choice(levels[k]) if kk == k else child[kk]
+                for kk in range(n_genes)
             )
         f = fitness(child)
         evals += 1

@@ -16,6 +16,11 @@ class AttentionWorkload:
     # builders only emit tiles that intersect the diagonal or sit below it
     # (DESIGN.md §3). Table 1 workloads are bidirectional (False).
     causal: bool = False
+    # KV operand width in bytes (DESIGN.md §5). None -> the device's
+    # native bytes_per_elem; 1 -> int8 KV with fp32 per-row scale
+    # side-traffic and a VEC dequant pass charged by the schedules
+    # (resolved through schedules._effective_kv_bpe).
+    kv_bpe: int | None = None
 
     @property
     def _score_elems(self) -> int:
@@ -63,6 +68,9 @@ class PagedDecodeWorkload:
     emb: int
     kv_lens: tuple[int, ...]      # per-sequence live cache lengths
     group: int = 1
+    # KV-cache element width. None -> device native; 1 -> int8 pages
+    # with one fp32 scale per page (K and V each) riding the page DMA.
+    kv_bpe: int | None = None
 
     @property
     def batch(self) -> int:
@@ -87,9 +95,18 @@ class PagedDecodeWorkload:
         return self.heads * self.group * self.total_kv
 
     def kv_bytes(self, bpe: int, page: int) -> int:
-        """Page-granular K+V DMA: partial pages are charged whole."""
+        """Page-granular K+V DMA: partial pages are charged whole.
+
+        ``bpe`` is the device-native width; a quantized workload
+        (``kv_bpe``) overrides it and adds the per-page fp32 scales
+        side-traffic (one scalar per page for K and V each).
+        """
         pages = sum(-(-n // page) for n in self.kv_lens)
-        return 2 * self.heads * pages * page * self.emb * bpe
+        eff = self.kv_bpe or bpe
+        nbytes = 2 * self.heads * pages * page * self.emb * eff
+        if self.kv_bpe is not None and self.kv_bpe < bpe:
+            nbytes += 2 * self.heads * pages * 4  # fp32 page scales
+        return nbytes
 
 
 # Table 1: Network Configuration and Hyper-Parameters.
