@@ -64,7 +64,7 @@ def measured_section(arch_id: str, n_requests: int) -> dict:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     requests = make_requests(cfg, n_requests, max_new=MAX_NEW,
-                             max_prompt=36)
+                             max_prompt=36, long_prompts=False)
 
     def engine(kv_dtype):
         return ContinuousBatchingEngine(model, params, max_len=MAX_LEN,
@@ -72,9 +72,9 @@ def measured_section(arch_id: str, n_requests: int) -> dict:
                                         kv_dtype=kv_dtype)
 
     base = engine(None)
-    out_b, sec_b = _timed(base, requests)
+    out_b, sec_b, _ = _timed(base, requests)
     quant = engine("int8")
-    out_q, sec_q = _timed(quant, requests)
+    out_q, sec_q, _ = _timed(quant, requests)
     tokens = sum(len(v) for v in out_b.values())
 
     def side(eng, sec):

@@ -1,25 +1,32 @@
-"""Dense-wave vs paged-continuous serving on a mixed-length request set.
+"""Dense-wave vs chunked-paged-continuous serving on mixed-length requests.
 
-The wave engine buckets requests by prompt length and retires whole
-waves, so mixed lengths fragment the batch (dummy-row padding) and
-head-of-line block admission; the continuous engine keeps one
-long-lived decode batch over the paged KV pool. Both are measured on
-the same request set with a warm-up pass first (so jit compilation is
-excluded) and report:
+The request set is deliberately mixed LONG/SHORT: a few long prompts
+interleaved with many short ones. The wave engine buckets requests by
+prompt length and retires whole waves, so mixed lengths fragment the
+batch (dummy-row padding) and head-of-line block admission; the
+continuous engine keeps one long-lived decode batch over the paged KV
+pool and admits prompts in chunks co-scheduled with decode
+(DESIGN.md §6), so a long prompt neither stalls the live decode slots
+nor delays short requests behind a wave barrier. Both engines are
+measured on the same request set with a warm-up pass first (so jit
+compilation is excluded) and report:
 
 * ``tokens_per_s`` — generated tokens / wall seconds of the timed pass;
+* ``ttft_s`` / ``itl_s`` — p50/p95 time-to-first-token per request and
+  inter-token latency per decode gap, from the engines' per-token
+  wall-clock timestamps;
 * ``peak_kv_bytes`` — peak KV bytes resident: the dense engine pins a
   full (batch, max_len) cache per wave; the paged engine's peak is its
   high-water page count times the per-page footprint (``pool_bytes`` is
   the preallocated pool for reference);
 * ``occupancy`` — the paged pool's pages-in-use per decode step of the
-  timed pass, so the peak-KV-byte claim is auditable over time rather
-  than a single high-water number.
+  timed pass, so the peak-KV-byte claim is auditable over time.
 
-Writes ``BENCH_serving.json`` at the repo root. A sim section runs the
-page-size tiling search (§4.2 extended to decode) for a workload shaped
-like the measured request set. ``--smoke`` shrinks the request set for
-the CI invocation.
+Writes ``BENCH_serving.json`` at the repo root. The sim section runs
+the page-size tiling search (§4.2 extended to decode) plus the
+chunked-prefill admission search (§6: chunk size as a fifth factor) for
+workloads shaped like the measured request set. ``--smoke`` shrinks the
+request set for the CI invocation.
 """
 
 from __future__ import annotations
@@ -36,41 +43,76 @@ import numpy as np
 from repro.configs import get_smoke
 from repro.models import build_model
 from repro.serving import ContinuousBatchingEngine, Request, ServingEngine
-from repro.sim import EDGE_HW, PagedDecodeWorkload, search_tiling
+from repro.sim import (
+    EDGE_HW,
+    ChunkedPrefillWorkload,
+    PagedDecodeWorkload,
+    search_tiling,
+)
 
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
 
 ARCH = "internlm2-1.8b"
-MAX_LEN = 96
+MAX_LEN = 112
 BATCH = 4
 PAGE = 8
-MAX_NEW = 8
+MAX_NEW = 16
+CHUNK = 16          # prompt tokens per mixed engine step
 
 
 def make_requests(cfg, n: int, seed: int = 0, *, max_new: int = MAX_NEW,
-                  max_prompt: int = 40) -> list[Request]:
+                  max_prompt: int = 40,
+                  long_prompts: bool = True) -> list[Request]:
+    """Mixed long/short scenario: every 4th request is a LONG prompt
+    (48-72 tokens — several chunks of admission work), the rest short
+    interactive ones. Lengths are drawn, not fixed, so the wave engine
+    faces the realistic case where prompts rarely share a bucket.
+    ``long_prompts=False`` keeps every prompt under ``max_prompt`` (the
+    quantized-decode bench's smaller cache budget)."""
     rng = np.random.default_rng(seed)
-    lens = rng.integers(5, max_prompt, size=n)
+    lens = [int(x) for x in rng.integers(5, max_prompt, size=n)]
+    if long_prompts:
+        for i in range(0, n, 4):
+            lens[i] = int(rng.integers(48, 73))
     return [
         Request(rid=i,
                 prompt=rng.integers(3, cfg.vocab_size,
-                                    size=(int(ln),)).astype(np.int32),
+                                    size=(ln,)).astype(np.int32),
                 max_new_tokens=max_new, eos_id=-2)
         for i, ln in enumerate(lens)
     ]
 
 
-def _timed(engine, requests) -> tuple[dict, float]:
+def _latency_stats(engine, requests) -> dict:
+    """p50/p95 TTFT and inter-token latency from the engine's per-token
+    wall-clock timestamps (last serve() pass)."""
+    ttfts, itls = [], []
+    for r in requests:
+        ts = engine.token_walltimes.get(r.rid)
+        if not ts:
+            continue
+        ttfts.append(ts[0] - engine.serve_t0)
+        itls.extend(np.diff(ts))
+    def pct(xs, q):
+        return float(np.percentile(xs, q)) if xs else 0.0
+    return {
+        "ttft_s": {"p50": pct(ttfts, 50), "p95": pct(ttfts, 95)},
+        "itl_s": {"p50": pct(itls, 50), "p95": pct(itls, 95)},
+    }
+
+
+def _timed(engine, requests) -> tuple[dict, float, dict]:
     engine.serve([Request(**r.__dict__) for r in requests])  # warm-up
     # best-of-2 timed passes: damps host scheduling jitter so the CI
     # bench-regression guard compares serving-path changes, not noise
-    best = None
+    best = lat = None
     for _ in range(2):
         t0 = time.perf_counter()
         out = engine.serve([Request(**r.__dict__) for r in requests])
         sec = time.perf_counter() - t0
-        best = sec if best is None else min(best, sec)
-    return out, best
+        if best is None or sec < best:
+            best, lat = sec, _latency_stats(engine, requests)
+    return out, best, lat
 
 
 def run(n_requests: int) -> dict:
@@ -80,11 +122,12 @@ def run(n_requests: int) -> dict:
     requests = make_requests(cfg, n_requests)
 
     dense = ServingEngine(model, params, max_len=MAX_LEN, batch_size=BATCH)
-    out_d, sec_d = _timed(dense, requests)
+    out_d, sec_d, lat_d = _timed(dense, requests)
 
     paged = ContinuousBatchingEngine(model, params, max_len=MAX_LEN,
-                                     batch_size=BATCH, page_size=PAGE)
-    out_c, sec_c = _timed(paged, requests)
+                                     batch_size=BATCH, page_size=PAGE,
+                                     chunk_size=CHUNK)
+    out_c, sec_c, lat_c = _timed(paged, requests)
 
     for rid in out_d:  # both engines must produce identical greedy output
         np.testing.assert_array_equal(out_d[rid], out_c[rid])
@@ -104,6 +147,19 @@ def run(n_requests: int) -> dict:
                             kv_lens=kv_lens)
     best = search_tiling("paged_decode", w, EDGE_HW, strategy="grid")
 
+    # ... and of admitting a LONG prompt while those slots decode: the
+    # chunk size is searched next to page size / precision (§6); for
+    # long prompts the whole-prompt row buffer overflows L1, so the
+    # search must land on a finite chunk.
+    wc = ChunkedPrefillWorkload("long_admit", heads=cfg.num_kv_heads,
+                                emb=cfg.hd,
+                                group=cfg.num_heads // cfg.num_kv_heads,
+                                prompt=2048,
+                                decode_kv_lens=kv_lens[:BATCH - 1])
+    best_c = search_tiling("chunked_prefill", wc, EDGE_HW, strategy="grid")
+
+    ttft_ratio = (lat_d["ttft_s"]["p50"] / lat_c["ttft_s"]["p50"]
+                  if lat_c["ttft_s"]["p50"] else 0.0)
     return {
         "arch": cfg.name,
         "n_requests": len(requests),
@@ -114,14 +170,17 @@ def run(n_requests: int) -> dict:
             "seconds": sec_d,
             "tokens_per_s": tokens / sec_d,
             "peak_kv_bytes": dense_kv,
+            **lat_d,
         },
         "paged_continuous": {
             "seconds": sec_c,
             "tokens_per_s": tokens / sec_c,
             "page_size": PAGE,
+            "chunk_size": paged.chunk_size,
             "peak_pages_used": paged.peak_pages_used,
             "peak_kv_bytes": paged_kv,
             "pool_bytes": (paged.num_pages - 1) * page_bytes,
+            **lat_c,
             "occupancy": {
                 "pages_used_per_step": list(paged.occupancy_log),
                 "mean_pages": float(np.mean(paged.occupancy_log))
@@ -131,6 +190,9 @@ def run(n_requests: int) -> dict:
             },
         },
         "throughput_ratio": sec_d / sec_c,
+        # machine-normalized TTFT win: wave p50 / continuous p50 within
+        # the same process (guarded by check_bench_regression.py)
+        "ttft_ratio": ttft_ratio,
         "kv_bytes_ratio": paged_kv / dense_kv,
         "sim_page_search": {
             "best_page_size": best.tiling.nkv,
@@ -138,6 +200,14 @@ def run(n_requests: int) -> dict:
             "best_kv_bpe": best.tiling.kv_bpe,
             "cycles": best.result.cycles,
             "evals": best.evals,
+        },
+        "sim_chunk_search": {
+            "prompt": wc.prompt,
+            "best_chunk": best_c.tiling.chunk,
+            "best_page_size": best_c.tiling.nkv,
+            "best_kv_bpe": best_c.tiling.kv_bpe,
+            "cycles": best_c.result.cycles,
+            "evals": best_c.evals,
         },
     }
 
@@ -150,8 +220,10 @@ def main(emit, n_requests: int = 12) -> dict:
         report["paged_continuous"]["seconds"] * 1e6,
         f"tok/s={report['paged_continuous']['tokens_per_s']:.1f} "
         f"speedup={report['throughput_ratio']:.2f}x "
+        f"ttft={report['ttft_ratio']:.2f}x "
         f"kv_bytes={report['kv_bytes_ratio']:.2f}x_dense "
-        f"sim_page={report['sim_page_search']['best_page_size']}",
+        f"sim_page={report['sim_page_search']['best_page_size']} "
+        f"sim_chunk={report['sim_chunk_search']['best_chunk']}",
     )
     return report
 
@@ -162,7 +234,10 @@ if __name__ == "__main__":
              n_requests=n)
     d, c = r["dense_wave"], r["paged_continuous"]
     print(f"dense-wave:       {d['tokens_per_s']:8.1f} tok/s  "
+          f"p50 TTFT {d['ttft_s']['p50'] * 1e3:7.1f} ms  "
           f"peak KV {d['peak_kv_bytes']:8d} B")
     print(f"paged-continuous: {c['tokens_per_s']:8.1f} tok/s  "
+          f"p50 TTFT {c['ttft_s']['p50'] * 1e3:7.1f} ms  "
           f"peak KV {c['peak_kv_bytes']:8d} B "
-          f"(pool {c['pool_bytes']} B, {c['peak_pages_used']} pages)")
+          f"(pool {c['pool_bytes']} B, {c['peak_pages_used']} pages, "
+          f"chunk {c['chunk_size']})")

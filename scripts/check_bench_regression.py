@@ -1,19 +1,23 @@
-"""Fail CI when serving throughput regresses vs the committed baseline.
+"""Fail CI when serving throughput OR TTFT regresses vs the baseline.
 
-Usage: check_bench_regression.py BASELINE.json CURRENT.json [--threshold F]
+Usage: check_bench_regression.py BASELINE.json CURRENT.json
+           [--threshold F] [--ttft-threshold F]
 
-Guards the paged-continuous tokens/s of a freshly produced
-BENCH_serving.json against the committed one. Raw wall-clock tokens/s
-swings with host load (shared CI machines vary far more than any real
-regression), so the guarded metric is machine-normalized: the
-dense-wave engine that runs back-to-back in the same process is the
-speed control, and the guard compares
+Guards the paged-continuous tokens/s AND p50 time-to-first-token of a
+freshly produced BENCH_serving.json against the committed one. Raw
+wall-clock numbers swing with host load (shared CI machines vary far
+more than any real regression), so both guarded metrics are
+machine-normalized: the dense-wave engine that runs back-to-back in the
+same process is the speed control, and the guard compares
 
     paged tokens/s / dense tokens/s   (== the committed throughput_ratio)
+    dense p50 TTFT / paged p50 TTFT   (== the committed ttft_ratio)
 
 which isolates serving-path regressions from host noise. Exits non-zero
-when that ratio drops more than ``threshold`` (default 10%) below the
-baseline; absolute tokens/s are printed informationally.
+when either ratio drops more than its threshold (default 10% / 35% —
+TTFT percentiles are noisier than aggregate tokens/s) below the
+baseline; absolute numbers are printed informationally. Baselines
+missing ``ttft_ratio`` (pre-chunked-prefill) skip that guard.
 """
 
 from __future__ import annotations
@@ -30,6 +34,9 @@ def main() -> int:
     ap.add_argument("current", type=Path)
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="max fractional normalized tokens/s drop allowed")
+    ap.add_argument("--ttft-threshold", type=float, default=0.35,
+                    help="max fractional normalized p50-TTFT-ratio drop "
+                         "allowed")
     args = ap.parse_args()
 
     # An empty/unreadable baseline (e.g. `git show` truncated the temp
@@ -73,6 +80,23 @@ def main() -> int:
               f"{drop:.1%} > {args.threshold:.0%} vs committed baseline",
               file=sys.stderr)
         return 1
+
+    b_ttft = base.get("ttft_ratio")
+    c_ttft = cur.get("ttft_ratio")
+    # distinguish missing (pre-chunked-prefill baseline: skip) from
+    # present-but-zero (TTFT measurement collapsed: a 100% drop, FAIL)
+    if b_ttft and c_ttft is not None:
+        ttft_drop = 1.0 - c_ttft / b_ttft
+        print(f"bench-guard: normalized p50 TTFT win (dense/paged ratio): "
+              f"{b_ttft:.2f}x -> {c_ttft:.2f}x ({-ttft_drop:+.1%})")
+        if ttft_drop > args.ttft_threshold:
+            print(f"bench-guard: normalized TTFT ratio dropped "
+                  f"{ttft_drop:.1%} > {args.ttft_threshold:.0%} vs "
+                  f"committed baseline", file=sys.stderr)
+            return 1
+    else:
+        print("bench-guard: no ttft_ratio in one of the files; "
+              "skipping TTFT guard")
     print("bench-guard: ok")
     return 0
 

@@ -7,24 +7,28 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# Fast-fail signal on the paged serving + quantized-KV subsystems
-# before the full suite; the full run skips them to avoid paying the
-# jit compiles twice.
-python -m pytest -x -q tests/test_paged_cache.py tests/test_quantized_kv.py
+# Fast-fail signal on the paged serving + quantized-KV + chunked
+# prefill subsystems before the full suite; the full run skips them to
+# avoid paying the jit compiles twice.
+python -m pytest -x -q tests/test_paged_cache.py tests/test_quantized_kv.py \
+  tests/test_chunked_prefill.py
 
 python -m pytest -x -q --ignore=tests/test_paged_cache.py \
-  --ignore=tests/test_quantized_kv.py
+  --ignore=tests/test_quantized_kv.py \
+  --ignore=tests/test_chunked_prefill.py
 
-# Serving smoke: dense-wave vs paged-continuous on a mixed-length
-# request set (asserts output equivalence, writes BENCH_serving.json).
-# The committed baseline is captured first so the regression guard can
-# compare the fresh run against it.
+# Serving smoke: dense-wave vs chunked-paged-continuous on a mixed
+# LONG/SHORT request set (asserts output equivalence, writes
+# BENCH_serving.json with p50/p95 TTFT + inter-token latency next to
+# tokens/s). The committed baseline is captured first so the regression
+# guard can compare the fresh run against it on BOTH normalized ratios
+# (tokens/s and p50 TTFT).
 BENCH_BASELINE="$(mktemp)"
 git show HEAD:BENCH_serving.json > "$BENCH_BASELINE" 2>/dev/null \
   || cp BENCH_serving.json "$BENCH_BASELINE" 2>/dev/null || true
 python benchmarks/serving_throughput.py --smoke
 python scripts/check_bench_regression.py "$BENCH_BASELINE" \
-  BENCH_serving.json
+  BENCH_serving.json --threshold 0.10 --ttft-threshold 0.35
 rm -f "$BENCH_BASELINE"
 
 # Int8 KV-cache smoke: greedy agreement + simulated decode speedup vs

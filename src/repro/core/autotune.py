@@ -99,6 +99,48 @@ def _score(method: str, blk_q: int, blk_kv: int, *, b_h: int, n_q: int,
     return mxu, hbm, vpu
 
 
+# Fixed cost a chunked-prefill engine step pays regardless of chunk size
+# (host dispatch + grid-pipeline ramp, seconds) — what makes one-page
+# chunks a bad default even though they minimize the decode stall.
+CHUNK_STEP_OVERHEAD_S = 5e-5
+
+
+@functools.lru_cache(maxsize=1024)
+def tune_prefill_chunk(*, b_h: int, n_ctx: int, e: int, itemsize: int = 2,
+                       page: int = 16, kv_itemsize: int | None = None,
+                       step_seconds_target: float = 2e-3) -> int:
+    """Engine-default prompt chunk size for chunked paged prefill (§6).
+
+    The serving trade: every chunk re-reads all prior context from the
+    page pool, so BIGGER chunks minimize total prefill work (the KV
+    re-read traffic is ~ n_ctx^2/(2*chunk) rows plus a fixed per-step
+    dispatch overhead), while the mixed scheduler stalls every live
+    decode slot for one whole chunk step, so the chunk is capped by the
+    worst-case step time — ``step_seconds_target`` bounds the
+    inter-token-latency hit decode streams take while a long prompt is
+    admitted. Scored with the same MXU/HBM/VPU max-of-streams model as
+    ``tune_attention`` (``kv_itemsize=1`` prices int8 pools); returns
+    the largest page-aligned chunk whose worst-case (full-context) step
+    fits the target, floored at one page.
+    """
+    kv_item = itemsize if kv_itemsize is None else kv_itemsize
+    # per-row page bytes; int8 pools amortize one fp32 scale per page
+    kv_row_bytes = e * kv_item + ((4 / page) if kv_item < itemsize else 0)
+    best = page
+    c = page
+    while c < 2 * n_ctx:
+        chunk = min(c, n_ctx)
+        # worst-case step: the last chunk sees the whole context
+        mxu = 4.0 * b_h * chunk * n_ctx * e / MXU_FLOPS
+        hbm = (2 * b_h * n_ctx * kv_row_bytes
+               + 2 * b_h * chunk * e * itemsize) / HBM_BW
+        vpu = 6.0 * b_h * chunk * n_ctx / VPU_FLOPS
+        if max(mxu, hbm, vpu) + CHUNK_STEP_OVERHEAD_S <= step_seconds_target:
+            best = chunk
+        c *= 2
+    return best
+
+
 @functools.lru_cache(maxsize=1024)
 def tune_attention(*, b_h: int, n_q: int, n_kv: int, e: int,
                    itemsize: int = 2,

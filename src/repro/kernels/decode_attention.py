@@ -148,8 +148,10 @@ def decode_attention_flat(
     )
     kwargs = {}
     if not interpret:
+        # B*Hkv cells are independent; only the KV-block dimension
+        # carries the online-softmax accumulation in scratch.
         kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary")
+            dimension_semantics=("parallel", "arbitrary")
         )
     return pl.pallas_call(
         kernel,

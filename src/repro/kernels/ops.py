@@ -22,6 +22,7 @@ from repro.kernels.decode_attention import decode_attention_flat
 from repro.kernels.flash_attention import flash_attention_flat
 from repro.kernels.mas_attention import mas_attention_flat
 from repro.kernels.paged_decode_attention import paged_decode_attention_flat
+from repro.kernels.paged_prefill_attention import paged_prefill_attention_flat
 
 
 def _default_interpret(interpret: bool | None) -> bool:
@@ -210,3 +211,44 @@ def paged_decode_attention(
         interpret=interp,
     )
     return of[:, :, :group].reshape(b, hq, e)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def paged_prefill_attention(
+    q: jax.Array,           # (Hq, chunk, E) — one sequence's prompt chunk
+    k_pages: jax.Array,     # (Hkv, P, page, E) — global page pool
+    v_pages: jax.Array,     # (Hkv, P, page, E)
+    page_table: jax.Array,  # (max_pages,) int32
+    q_offset: jax.Array,    # () int32 absolute position of chunk row 0
+    kv_len: jax.Array,      # () int32 visible context length
+    *,
+    sm_scale: float | None = None,
+    k_scales: jax.Array | None = None,  # (Hkv, P) fp32 per-page scales
+    v_scales: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One prompt chunk attending to all prior context in a paged cache.
+
+    The chunk's own K/V must already be written to its pages (the model
+    layer writes before it attends, DESIGN.md §6). Pad rows past
+    ``kv_len - q_offset`` return garbage the caller slices off.
+    """
+    hq, chunk, e = q.shape
+    hkv, _, page_size, _ = k_pages.shape
+    assert hq % hkv == 0
+    interp = _default_interpret(interpret)
+
+    if not interp:
+        sub_kv = _sublane_multiple(k_pages.dtype)
+        assert page_size % sub_kv == 0, (
+            f"page_size {page_size} must be a multiple of the {sub_kv}-row "
+            f"sublane tile for {k_pages.dtype}"
+        )
+    qf = _pad_to(q, 1, _sublane_multiple(q.dtype))
+
+    of = paged_prefill_attention_flat(
+        qf, k_pages, v_pages, page_table, q_offset, kv_len,
+        sm_scale=sm_scale, k_scales=k_scales, v_scales=v_scales,
+        interpret=interp,
+    )
+    return of[:, :chunk]

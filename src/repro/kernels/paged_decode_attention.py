@@ -148,8 +148,10 @@ def paged_decode_attention_flat(
     )
     kwargs = {}
     if not interpret:
+        # Batch and kv-head cells are independent; only the page
+        # dimension carries the online-softmax accumulation in scratch.
         kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")
+            dimension_semantics=("parallel", "parallel", "arbitrary")
         )
     return pl.pallas_call(
         kernel,

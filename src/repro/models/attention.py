@@ -191,6 +191,59 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens, *,
     return (o / l).reshape(b, hq, e).astype(q.dtype)
 
 
+def paged_prefill_attention(q, k_pages, v_pages, page_table, q_offset,
+                            kv_len, *, impl="xla", k_scales=None,
+                            v_scales=None):
+    """One prompt chunk attending to all prior context in a paged cache.
+
+    q: (Hq, chunk, E) for ONE sequence; pools: (Hkv, P, page, E);
+    page_table: (max_pages,) int32; ``q_offset``/``kv_len`` are traced
+    scalars (chunk row i sits at absolute position q_offset + i and
+    sees keys < min(q_offset + i + 1, kv_len)). The chunk's own K/V are
+    already in the pages (DESIGN.md §6). The pallas path gathers pages
+    through the prefetched page table; the XLA path gathers the pool
+    dense and runs the same causal fp32 masked softmax as
+    ``ref.attention`` (op-for-op with the wave engine's prefill, so
+    greedy argmax agrees between monolithic and chunked admission).
+    Int8 pools apply the per-page scales exactly where the kernel does:
+    K scales on the score columns, V scales folded into P.
+    """
+    if impl == "pallas":
+        return kops.paged_prefill_attention(q, k_pages, v_pages, page_table,
+                                            q_offset, kv_len,
+                                            k_scales=k_scales,
+                                            v_scales=v_scales)
+    hq, chunk, e = q.shape
+    hkv, _, page, _ = k_pages.shape
+    k = k_pages[:, page_table].reshape(hkv, -1, e)  # (Hkv, S, E)
+    v = v_pages[:, page_table].reshape(hkv, -1, e)
+    if k_scales is None:
+        return kref.attention(q[None], k[None], v[None], causal=True,
+                              kv_len=kv_len, q_offset=q_offset)[0]
+    g = hq // hkv
+    s_len = k.shape[1]
+    qg = q.reshape(hkv, g, chunk, e)
+    scale = e**-0.5
+    sc = jnp.einsum("kgqe,kse->kgqs", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+
+    def per_position(scales):
+        return jnp.repeat(scales[:, page_table], page, axis=-1)
+
+    sc = sc * per_position(k_scales)[:, None, None, :]
+    rows = q_offset + jnp.arange(chunk)[:, None]
+    cols = jnp.arange(s_len)[None, :]
+    mask = (cols <= rows) & (cols < kv_len)
+    sc = jnp.where(mask[None, None], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    p = p * per_position(v_scales)[:, None, None, :]
+    o = jnp.einsum("kgqs,kse->kgqe", p, v.astype(jnp.float32))
+    return (o / l).reshape(hq, chunk, e).astype(q.dtype)
+
+
 def sharded_decode_attention(q, k_cache, v_cache, kv_len, *,
                              k_scale=None, v_scale=None):
     """Distributed flash-decode (§Perf iter 2a).

@@ -244,6 +244,58 @@ def attn_paged_decode(params, x, cfg: ArchConfig, *, k_pages, v_pages,
             updates)
 
 
+def attn_paged_prefill(params, x, cfg: ArchConfig, *, k_pages, v_pages,
+                       page_table, chunk_page_ids, q_offset, kv_len,
+                       k_scales=None, v_scales=None):
+    """One prompt chunk of self-attention against a paged cache (§6).
+
+    x: (1, chunk, D) — one sequence's chunk, rows at absolute positions
+    ``q_offset + i``; pools: (Hkv, P, page, E); page_table: (max_pages,)
+    for THE sequence; chunk_page_ids: (chunk // page,) physical pages of
+    the chunk's span (entries past the allocation point at the scratch
+    page); ``kv_len`` = q_offset + live rows (ragged last chunks pad).
+
+    The chunk's K/V rows are written into their pages FIRST — rows past
+    ``kv_len`` zeroed, so the ragged tail matches the zero-initialized
+    dense cache of the monolithic path and never enters a per-page
+    absmax — then the chunk's Q attends through the page-table gather,
+    which sees prior context and the chunk's own keys alike. Whole
+    pages are quantized at write time exactly like ``write_prefill_pages``
+    (the §5 per-page invariant: a reused physical page is overwritten
+    values-and-scale together, so no scale reset is ever needed).
+    Returns (out, pool updates dict).
+    """
+    chunk = x.shape[1]
+    hkv, _, page, e = k_pages.shape
+    positions = q_offset + jnp.arange(chunk)
+    q, k, v = _qkv(params, x, cfg, positions=positions)
+    live = (positions < kv_len)[None, :, None]
+    n_cp = chunk // page
+    quantized = k_pages.dtype == jnp.int8
+
+    def write(pages, scales, rows):
+        ch = jnp.where(live, rows, 0).reshape(hkv, n_cp, page, e)
+        if quantized:
+            qv, sc = quantize_q8(ch, (-2, -1))
+            return (pages.at[:, chunk_page_ids].set(qv),
+                    scales.at[:, chunk_page_ids].set(sc))
+        return pages.at[:, chunk_page_ids].set(ch.astype(pages.dtype)), None
+
+    k_pages, k_scales_new = write(k_pages, k_scales, k[0])
+    v_pages, v_scales_new = write(v_pages, v_scales, v[0])
+    if quantized:
+        k_scales, v_scales = k_scales_new, v_scales_new
+    o = attn_mod.paged_prefill_attention(
+        q[0], k_pages, v_pages, page_table, q_offset, kv_len,
+        impl="pallas" if cfg.attn_impl == "pallas" else "xla",
+        k_scales=k_scales, v_scales=v_scales,
+    )
+    updates = {"k": k_pages, "v": v_pages}
+    if quantized:
+        updates.update(k_scale=k_scales, v_scale=v_scales)
+    return (_merge_heads(o[None]) @ params["wo"].astype(x.dtype), updates)
+
+
 def cross_attn_block(params, x, cfg: ArchConfig, *, mem_k, mem_v):
     """Decoder cross-attention against precomputed encoder K/V."""
     dt = x.dtype
@@ -677,6 +729,47 @@ def paged_decode_step(params, cfg: ArchConfig, token, cache, page_table,
     x, new_units = jax.lax.scan(unit_body, x,
                                 (params["units"], cache["units"]))
     return _unembed(params, x, cfg), {"units": new_units}
+
+
+def prefill_chunk(params, cfg: ArchConfig, tokens, cache, page_table,
+                  chunk_page_ids, q_offset, chunk_len):
+    """One prompt chunk of chunked paged prefill (DESIGN.md §6).
+
+    tokens: (1, chunk) int32 — chunk rows at absolute positions
+    ``q_offset + i``, ragged last chunks padded past ``chunk_len``;
+    page_table: (max_pages,) int32 for THE one sequence;
+    chunk_page_ids: (chunk // page,) physical pages of the chunk's span.
+    Writes the chunk's K/V straight into the page pool per layer and
+    returns ``(last_logits (1, V), cache)`` where ``last_logits`` is the
+    chunk's last LIVE row — on the final chunk, the admitted request's
+    first token, with no dense batch-1 cache and no copy-on-admit
+    scatter anywhere on the path.
+    """
+    _check_paged_support(cfg)
+    x = _embed(params, tokens, cfg)
+    kv_len = q_offset + chunk_len
+
+    def unit_body(x, xs):
+        p_unit, c_unit = xs
+        p, c = p_unit["b0"], c_unit["b0"]
+        y, pool_updates = attn_paged_prefill(
+            p["attn"], x, cfg, k_pages=c["k"], v_pages=c["v"],
+            page_table=page_table, chunk_page_ids=chunk_page_ids,
+            q_offset=q_offset, kv_len=kv_len,
+            k_scales=c.get("k_scale"), v_scales=c.get("v_scale"),
+        )
+        x = x + y
+        if cfg.moe is not None:
+            y, _ = moe_ffn(p["ffn"], x, cfg)
+        else:
+            y = mlp(p["ffn"], x, cfg)
+        return x + y, {"b0": dict(c, **pool_updates)}
+
+    x, new_units = jax.lax.scan(unit_body, x,
+                                (params["units"], cache["units"]))
+    last = jax.lax.dynamic_slice_in_dim(x, chunk_len - 1, 1, axis=1)
+    logits = _unembed(params, last, cfg)
+    return logits[:, 0], {"units": new_units}
 
 
 def decode_step(params, cfg: ArchConfig, token, cache, pos):

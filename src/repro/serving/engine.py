@@ -7,23 +7,38 @@ once, then decodes greedily, and cannot admit new work until the whole
 wave retires.
 
 ``ContinuousBatchingEngine`` removes both restrictions with the paged
-KV subsystem (serving/paged_cache.py, DESIGN.md §4): one long-lived
-decode batch over global page pools; finished sequences free their
-pages and queued requests of ANY prompt length are admitted mid-flight
-by prefilling into freshly allocated pages (copy-on-admit).
+KV subsystem (serving/paged_cache.py, DESIGN.md §4) and admits prompts
+in fixed-size CHUNKS co-scheduled with decode (DESIGN.md §6): one
+long-lived decode batch over global page pools; finished sequences free
+their pages, and each engine step packs up to ``chunk_size`` prompt
+tokens from the head-of-queue request alongside all live decode slots —
+prefill writes straight into the allocated pages (no dense batch-1
+cache, no copy-on-admit scatter, one compile shape per step kind), and
+long prompts no longer head-of-line-block decode.
+
+Both engines record per-token wall-clock timestamps
+(``token_walltimes``) so benchmarks can report time-to-first-token and
+inter-token latency next to tokens/s.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from collections import deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.autotune import tune_prefill_chunk
 from repro.models.api import Model
-from repro.serving.paged_cache import PagedKVCacheManager, page_footprint_bytes
+from repro.serving.paged_cache import (
+    SCRATCH_PAGE,
+    PagedKVCacheManager,
+    page_footprint_bytes,
+)
 
 
 @dataclasses.dataclass
@@ -45,6 +60,8 @@ class ServingEngine:
         # kv_dtype="int8": prefill builds a quantized dense cache and
         # decode appends per-row quantized tokens (DESIGN.md §5).
         self.kv_dtype = jnp.dtype(kv_dtype) if kv_dtype is not None else None
+        self.token_walltimes: dict[int, list[float]] = {}
+        self.serve_t0 = 0.0
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, model.cfg, t, c, pos)
         )
@@ -55,12 +72,29 @@ class ServingEngine:
             lambda p, t: model.prefill(p, model.cfg, t, self.max_len,
                                        kv_dtype=self.kv_dtype)
         )
+        # argmax + dummy-row pad, jitted once per distinct n_real (the
+        # static arg) instead of a fresh closure retracing per wave
+        batch = batch_size
+
+        @functools.partial(jax.jit, static_argnums=1)
+        def next_token(logits, n_real):
+            live = jnp.argmax(logits[:n_real, -1], axis=-1).astype(
+                jnp.int32
+            )[:, None]
+            if n_real == batch:
+                return live
+            pad = jnp.ones((batch - n_real, 1), jnp.int32)
+            return jnp.concatenate([live, pad])
+
+        self._next_token = next_token
 
     def _prefill(self, tokens):
         return self._prefill_fn(self.params, tokens)
 
     def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
         """Bucket by prompt length, serve each bucket as batched waves."""
+        self.token_walltimes = {}
+        self.serve_t0 = time.perf_counter()
         buckets: dict[int, list[Request]] = {}
         for r in requests:
             buckets.setdefault(len(r.prompt), []).append(r)
@@ -91,53 +125,50 @@ class ServingEngine:
         max_new = max(r.max_new_tokens for r in requests)
         out = {r.rid: [] for r in requests}
         done = np.array([r.max_new_tokens == 0 for r in requests])
-        pad = jnp.ones((self.batch_size - n_real, 1), jnp.int32)
 
-        def next_token(logits):
-            live = jnp.argmax(logits[:n_real, -1], axis=-1).astype(
-                jnp.int32
-            )[:, None]
-            return live if n_real == self.batch_size else jnp.concatenate(
-                [live, pad]
-            )
-
-        token = next_token(logits)
+        token = self._next_token(logits, n_real)
         for step in range(max_new):
             # One device->host transfer per step, live rows only;
             # per-row int() on the device array would sync the stream
             # once per request.
             token_host = np.asarray(token[:n_real])
+            now = time.perf_counter()
             for i, r in enumerate(requests):
                 if not done[i]:
                     t = int(token_host[i, 0])
                     out[r.rid].append(t)
+                    self.token_walltimes.setdefault(r.rid, []).append(now)
                     if t == r.eos_id or len(out[r.rid]) >= r.max_new_tokens:
                         done[i] = True
             if done.all():
                 break
             logits, cache = self._decode(self.params, cache, token,
                                          jnp.int32(plen + step))
-            token = next_token(logits)
+            token = self._next_token(logits, n_real)
         return {rid: np.array(v, np.int32) for rid, v in out.items()}
 
 
 class ContinuousBatchingEngine:
-    """Paged-KV continuous batching over a single long-lived decode batch.
+    """Paged-KV continuous batching with chunked prefill admission.
 
     ``batch_size`` decode slots share page pools of ``num_pages`` pages.
-    Admission is reservation-based (DESIGN.md §4): a queued request is
-    admitted into a free slot as soon as pages for its prompt AND its
-    full decode budget are available, prefilled at its prompt length
-    rounded up to a page boundary (page-granular compile buckets), and
-    its dense batch-1 cache is scattered into the allocated pages. Every
-    decode step advances all live slots with per-sequence positions;
-    retiring sequences free their pages immediately, unblocking the
-    admission check that runs between steps.
+    Admission is reservation-based FIFO (DESIGN.md §4): the head-of-
+    queue request takes a free slot as soon as pages for its prompt AND
+    its full decode budget are available. Its prompt is then prefilled
+    ``chunk_size`` tokens per engine step (DESIGN.md §6) — each chunk
+    writes its K/V straight into the allocated pages through
+    ``prefill_chunk`` and rides the SAME jitted step as the live decode
+    slots, so decode advances while a long prompt is mid-admission, all
+    prompts share one compile shape, and the first token comes out of
+    the last chunk's logits in the step's single host transfer (no
+    per-admit argmax sync, no dense batch-1 cache, no copy-on-admit
+    scatter). Retiring sequences free their pages between steps.
     """
 
     def __init__(self, model: Model, params, *, max_len: int = 512,
                  batch_size: int = 4, page_size: int = 16,
-                 num_pages: int | None = None, kv_dtype=None):
+                 num_pages: int | None = None, kv_dtype=None,
+                 chunk_size: int | None = None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -145,29 +176,73 @@ class ContinuousBatchingEngine:
         self.batch_size = batch_size
         self.page_size = page_size
         # kv_dtype="int8": the pools store quantized pages + per-page
-        # fp32 scales; prefill stays at compute precision and the
-        # copy-on-admit scatter quantizes whole pages (DESIGN.md §5).
+        # fp32 scales; chunk writes quantize whole pages (DESIGN.md §5).
         self.kv_dtype = (jnp.dtype(kv_dtype) if kv_dtype is not None
                          else jnp.dtype(model.cfg.compute_dtype))
         self.max_pages = -(-max_len // page_size)
         if num_pages is None:
             num_pages = batch_size * self.max_pages + 1  # + scratch page
         self.num_pages = num_pages
+        if chunk_size is None:
+            # analytical default (core/autotune): the largest chunk
+            # whose worst-case step keeps decode ITL bounded
+            chunk_size = tune_prefill_chunk(
+                b_h=self.cfg.num_heads, n_ctx=max_len, e=self.cfg.hd,
+                itemsize=jnp.dtype(self.cfg.compute_dtype).itemsize,
+                page=page_size,
+                kv_itemsize=self.kv_dtype.itemsize,
+            )
+        # chunks are page-aligned and never exceed the page-rounded
+        # prompt capacity (one compile shape per step kind)
+        chunk_size = max(page_size, min(chunk_size,
+                                        self.max_pages * page_size))
+        chunk_size = -(-chunk_size // page_size) * page_size
+        self.chunk_size = chunk_size
+        self.chunk_pages = chunk_size // page_size
         self.peak_pages_used = 0  # across serve() calls, for benchmarks
         # per-decode-step pool occupancy of the LAST serve() call, so
         # benchmark KV-byte claims are auditable over time
         self.occupancy_log: list[int] = []
-        self._decode = jax.jit(
-            lambda p, c, t, table, pos: model.paged_decode_step(
-                p, model.cfg, t, c, table, pos
+        # per-step scheduler trace of the LAST serve() call: whether a
+        # prompt chunk was packed and how many decode slots were live
+        self.step_log: list[dict] = []
+        self.token_walltimes: dict[int, list[float]] = {}
+        self.serve_t0 = 0.0
+
+        def decode_step(p, c, t, table, pos):
+            logits, c = model.paged_decode_step(p, model.cfg, t, c, table,
+                                                pos)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), c
+
+        def chunk_step(p, c, t, table, pos, ctokens, cpages, seq_table,
+                       q_offset, chunk_len):
+            # one mixed step: the prompt chunk and ALL decode slots in a
+            # single dispatch; both argmaxes land in one host transfer
+            first_logits, c = model.prefill_chunk(
+                p, model.cfg, ctokens, c, seq_table, cpages, q_offset,
+                chunk_len,
             )
-        )
-        self._write = jax.jit(model.write_prefill_pages)
-        # compile buckets: (prompt_len, page-rounded cache len)
-        self._prefill = jax.jit(
-            lambda p, t, max_len: model.prefill(p, model.cfg, t, max_len),
-            static_argnums=2,
-        )
+            logits, c = model.paged_decode_step(p, model.cfg, t, c, table,
+                                                pos)
+            toks = jnp.concatenate([
+                jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32),
+                jnp.argmax(first_logits, axis=-1).astype(jnp.int32),
+            ])
+            return toks, c
+
+        def chunk_only(p, c, ctokens, cpages, seq_table, q_offset,
+                       chunk_len):
+            # no live decode slots: don't pay a dead full-batch decode
+            # pass just to move the prefill along
+            first_logits, c = model.prefill_chunk(
+                p, model.cfg, ctokens, c, seq_table, cpages, q_offset,
+                chunk_len,
+            )
+            return jnp.argmax(first_logits, axis=-1).astype(jnp.int32), c
+
+        self._decode = jax.jit(decode_step)
+        self._chunk_step = jax.jit(chunk_step)
+        self._chunk_only = jax.jit(chunk_only)
 
     def kv_bytes_per_page(self) -> int:
         cfg = self.cfg
@@ -176,9 +251,6 @@ class ContinuousBatchingEngine:
             page_size=self.page_size, head_dim=cfg.hd,
             kv_dtype=self.kv_dtype,
         )
-
-    def _n_pages(self, n_tokens: int) -> int:
-        return -(-n_tokens // self.page_size)
 
     def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
         B, ps = self.batch_size, self.page_size
@@ -189,89 +261,132 @@ class ContinuousBatchingEngine:
                                       page_size=ps, num_pages=self.num_pages,
                                       kv_dtype=self.kv_dtype)
         self.occupancy_log = []
+        self.step_log = []
+        self.token_walltimes = {}
+        self.serve_t0 = time.perf_counter()
         queue = deque(requests)
         active: dict[int, Request] = {}
         out: dict[int, list[int]] = {}
         tokens = np.zeros((B, 1), np.int32)
         positions = np.zeros((B,), np.int32)
+        pending: list | None = None  # [request, slot, q_offset] in flight
 
-        def try_admit():
-            nonlocal cache
-            for slot in range(B):
-                while slot not in active and queue:
-                    r = queue[0]
-                    if r.max_new_tokens <= 0:  # nothing to generate
-                        queue.popleft()
-                        out[r.rid] = []
-                        continue
-                    plen = len(r.prompt)
-                    budget = plen + r.max_new_tokens
-                    if budget > self.max_len:
-                        raise ValueError(
-                            f"request {r.rid} needs {budget} > max_len "
-                            f"{self.max_len}"
-                        )
-                    if mgr.pages_needed(budget) > self.num_pages - 1:
-                        # Even an empty pool can never hold it — waiting
-                        # would silently drop the request (and everything
-                        # FIFO-queued behind it) once the batch drains.
-                        raise ValueError(
-                            f"request {r.rid} needs "
-                            f"{mgr.pages_needed(budget)} pages > pool size "
-                            f"{self.num_pages - 1}"
-                        )
-                    if not mgr.can_admit(budget):
-                        return  # FIFO: wait for pages, don't starve r
+        def start_prefill():
+            """Admit the head-of-queue request into a free slot (FIFO:
+            reservation-based, one prefill stream at a time)."""
+            nonlocal pending
+            while queue:
+                r = queue[0]
+                if r.max_new_tokens <= 0:  # nothing to generate
                     queue.popleft()
-                    ids = mgr.admit(slot, plen, reserve=r.max_new_tokens)
-                    self.peak_pages_used = max(self.peak_pages_used,
-                                               mgr.peak_pages_used)
-                    # Prefill at the exact prompt length into a dense
-                    # batch-1 cache rounded up to a page boundary, then
-                    # scatter it into the allocated pages (copy-on-
-                    # admit). The last partial page's tail is zeros,
-                    # masked by the per-sequence kv_len.
-                    n_prompt_pages = self._n_pages(plen)
-                    logits, dense = self._prefill(
-                        self.params, jnp.asarray(r.prompt[None]),
-                        n_prompt_pages * ps,
+                    out[r.rid] = []
+                    continue
+                plen = len(r.prompt)
+                budget = plen + r.max_new_tokens
+                if budget > self.max_len:
+                    raise ValueError(
+                        f"request {r.rid} needs {budget} > max_len "
+                        f"{self.max_len}"
                     )
-                    cache = self._write(
-                        cache, dense,
-                        jnp.asarray(ids[:n_prompt_pages], jnp.int32),
+                if mgr.pages_needed(budget) > self.num_pages - 1:
+                    # Even an empty pool can never hold it — waiting
+                    # would silently drop the request (and everything
+                    # FIFO-queued behind it) once the batch drains.
+                    raise ValueError(
+                        f"request {r.rid} needs "
+                        f"{mgr.pages_needed(budget)} pages > pool size "
+                        f"{self.num_pages - 1}"
                     )
-                    t = int(jnp.argmax(logits[0, -1]))
+                free = [s for s in range(B) if s not in active]
+                if not free or not mgr.can_admit(budget):
+                    return  # FIFO: wait for slot/pages, don't starve r
+                queue.popleft()
+                mgr.admit(free[0], plen, reserve=r.max_new_tokens)
+                self.peak_pages_used = max(self.peak_pages_used,
+                                           mgr.peak_pages_used)
+                pending = [r, free[0], 0]
+                return
+
+        while True:
+            if pending is None:
+                start_prefill()
+            if pending is None and not active:
+                break
+            self.occupancy_log.append(mgr.pages_used)
+            self.step_log.append({"prefill_in_flight": pending is not None,
+                                  "live_decode": len(active)})
+            dec_table = mgr.table()
+            if pending is not None:
+                r, slot, q0 = pending
+                # mid-admission the slot must not decode into (or read
+                # from) its half-written pages: point it at scratch
+                # (the prefill keeps the real row, captured first)
+                seq_table = dec_table[slot].copy()
+                dec_table[slot] = SCRATCH_PAGE
+                plen = len(r.prompt)
+                clen = min(self.chunk_size, plen - q0)
+                ctokens = np.ones((1, self.chunk_size), np.int32)
+                ctokens[0, :clen] = r.prompt[q0:q0 + clen]
+                # the chunk's page span; padded-tail pages past the
+                # allocation land on the scratch page
+                seq_pages = mgr.seq_pages(slot)
+                p0 = q0 // ps
+                cpages = [seq_pages[p] if p < len(seq_pages)
+                          else SCRATCH_PAGE
+                          for p in range(p0, p0 + self.chunk_pages)]
+                chunk_args = (
+                    jnp.asarray(ctokens), jnp.asarray(cpages, jnp.int32),
+                    jnp.asarray(seq_table),
+                    jnp.int32(q0), jnp.int32(clen),
+                )
+                if active:
+                    toks, cache = self._chunk_step(
+                        self.params, cache, jnp.asarray(tokens),
+                        jnp.asarray(dec_table), jnp.asarray(positions),
+                        *chunk_args,
+                    )
+                else:
+                    toks, cache = self._chunk_only(
+                        self.params, cache, *chunk_args,
+                    )
+            else:
+                toks, cache = self._decode(
+                    self.params, cache, jnp.asarray(tokens),
+                    jnp.asarray(dec_table), jnp.asarray(positions),
+                )
+            # the step's single device->host transfer carries decode
+            # tokens AND (on the final chunk) the admitted request's
+            # first token — no per-admit argmax sync
+            token_host = np.asarray(toks)
+            now = time.perf_counter()
+            for slot_i, r_i in list(active.items()):
+                t = int(token_host[slot_i])
+                out[r_i.rid].append(t)
+                self.token_walltimes.setdefault(r_i.rid, []).append(now)
+                positions[slot_i] += 1
+                mgr.append(slot_i)
+                if t == r_i.eos_id or len(out[r_i.rid]) >= r_i.max_new_tokens:
+                    mgr.free(slot_i)
+                    del active[slot_i]
+                    tokens[slot_i, 0] = 0
+                    positions[slot_i] = 0
+                else:
+                    tokens[slot_i, 0] = t
+            if pending is not None:
+                q0 += clen
+                if q0 >= plen:  # prefill complete: first token is out
+                    t = int(token_host[-1])
                     out[r.rid] = [t]
+                    self.token_walltimes[r.rid] = [now]
                     if t == r.eos_id or r.max_new_tokens <= 1:
                         mgr.free(slot)  # finished straight out of prefill
-                        continue
-                    active[slot] = r
-                    tokens[slot, 0] = t
-                    positions[slot] = plen
-
-        try_admit()
-        while active:
-            self.occupancy_log.append(mgr.pages_used)
-            logits, cache = self._decode(
-                self.params, cache, jnp.asarray(tokens),
-                jnp.asarray(mgr.table()), jnp.asarray(positions),
-            )
-            token_host = np.asarray(
-                jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            )
-            for slot, r in list(active.items()):
-                t = int(token_host[slot])
-                out[r.rid].append(t)
-                positions[slot] += 1
-                mgr.append(slot)
-                if t == r.eos_id or len(out[r.rid]) >= r.max_new_tokens:
-                    mgr.free(slot)
-                    del active[slot]
-                    tokens[slot, 0] = 0
-                    positions[slot] = 0
+                    else:
+                        active[slot] = r
+                        tokens[slot, 0] = t
+                        positions[slot] = plen
+                    pending = None
                 else:
-                    tokens[slot, 0] = t
-            try_admit()
+                    pending[2] = q0
         self.peak_pages_used = max(self.peak_pages_used,
                                    mgr.peak_pages_used)
         return {rid: np.array(v, np.int32) for rid, v in out.items()}

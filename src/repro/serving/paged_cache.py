@@ -157,6 +157,10 @@ class PagedKVCacheManager:
                 )
             seq.pages.extend(self.alloc(1))
 
+    def seq_pages(self, slot: int) -> list[int]:
+        """Physical page ids owned by ``slot`` (prompt-order)."""
+        return list(self._seqs[slot].pages)
+
     # -- device-facing views --
     def table(self) -> np.ndarray:
         """(num_slots, max_pages) int32; empty entries -> scratch page."""

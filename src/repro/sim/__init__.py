@@ -10,6 +10,7 @@ tiled task graphs and run through a multi-stream list scheduler.
 from repro.sim.hw import EDGE_HW, HWConfig
 from repro.sim.workload import (
     AttentionWorkload,
+    ChunkedPrefillWorkload,
     PagedDecodeWorkload,
     PAPER_NETWORKS,
 )
@@ -18,7 +19,7 @@ from repro.sim.schedules import METHODS, build_schedule, Tiling
 from repro.sim.search import search_tiling
 
 __all__ = [
-    "EDGE_HW", "HWConfig", "AttentionWorkload", "PagedDecodeWorkload",
-    "PAPER_NETWORKS", "simulate", "SimResult", "METHODS", "build_schedule",
-    "Tiling", "search_tiling",
+    "EDGE_HW", "HWConfig", "AttentionWorkload", "ChunkedPrefillWorkload",
+    "PagedDecodeWorkload", "PAPER_NETWORKS", "simulate", "SimResult",
+    "METHODS", "build_schedule", "Tiling", "search_tiling",
 ]

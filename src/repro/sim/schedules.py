@@ -17,7 +17,11 @@ import math
 
 from repro.sim.engine import Task
 from repro.sim.hw import HWConfig
-from repro.sim.workload import AttentionWorkload, PagedDecodeWorkload
+from repro.sim.workload import (
+    AttentionWorkload,
+    ChunkedPrefillWorkload,
+    PagedDecodeWorkload,
+)
 
 METHODS = ("layerwise", "softpipe", "flat", "tileflow", "fusemax", "mas")
 
@@ -31,6 +35,11 @@ class Tiling:
     # factor (§4.2 extended; DESIGN.md §5). None -> workload/device
     # default; 1 -> int8 KV (+ fp32 scale side-traffic, VEC dequant).
     kv_bpe: int | None = None
+    # Prompt tokens per chunked-prefill engine step (DESIGN.md §6).
+    # None -> monolithic (whole-prompt) admission; searched for
+    # ChunkedPrefillWorkload next to kv_bpe (grid/MCTS/GA genomes carry
+    # it as a fifth gene).
+    chunk: int | None = None
 
 
 def _effective_kv_bpe(w, t: Tiling, hw: HWConfig) -> int:
@@ -610,6 +619,174 @@ def build_paged_decode(w, t, hw) -> list[Task] | None:
     return tasks
 
 
+# ---------------------------------------------------------------------------
+# Chunked paged prefill: admit one prompt in chunks, decode interleaved.
+# ---------------------------------------------------------------------------
+
+
+def build_chunked_prefill(w, t, hw) -> list[Task] | None:
+    """Task graph for admitting one prompt in chunks (DESIGN.md §6).
+
+    ``t.chunk`` is the CHUNK SIZE — the searchable factor (None ->
+    monolithic whole-prompt admission) — ``t.nkv`` the page size,
+    ``t.hh`` the kv-head tile (head tiles run back to back within a
+    step) and ``t.nq`` is ignored (the MXU row dim is group * chunk).
+    Per chunk and head tile: Q in, page-granular KV-read
+    DMA for ALL prior context plus the chunk itself (the re-read that
+    bigger chunks amortize — each page DMA pays
+    ``hw.dma_page_setup_cycles``), the (group*chunk x page) QK^T MACs
+    with the §3 three-band split (fully-visible pages aggregate into
+    one bulk task; diagonal-straddling pages are masked per page on the
+    VEC stream), ONE row-granularity softmax over the visible columns
+    (Alg. 3 — which is exactly what bounds the chunk: the §5.6 double
+    row buffer must hold (group*chunk x visible) score rows in L1, so
+    whole-prompt admission of a long prompt is infeasible and the
+    search is forced to a finite chunk), the PV MACs, the chunk's own
+    K/V page WRITES (plus a quantize VEC pass for int8 pools), and then
+    one decode step over ``w.decode_kv_lens`` — the engine's
+    token-budget rule: live decode slots advance once per chunk.
+    Steps serialize like the engine's jitted dispatch.
+    """
+    page = min(t.nkv, w.prompt)
+    chunk = w.prompt if t.chunk is None else min(t.chunk, w.prompt)
+    if chunk % page and chunk != w.prompt:
+        return None  # engine invariant: chunks are page-aligned
+    bpe = hw.bytes_per_elem
+    kv_bpe = _effective_kv_bpe(w, t, hw)
+    kv_quant = kv_bpe < bpe
+    heads_core = -(-w.heads // hw.cores)
+    hh = min(t.hh, heads_core)
+    n_head_tiles = -(-heads_core // hh)
+    g, e = w.group, w.emb
+    rows = hh * g * chunk
+    visible_max = -(-w.prompt // page) * page
+    # §5.6 L1 bound: double row buffer + double-buffered K/V pages + Q/O
+    need = (2 * rows * visible_max * bpe
+            + hh * 4 * page * e * kv_bpe
+            + 2 * hh * g * chunk * e * bpe)
+    if need > hw.l1_bytes:
+        return None
+
+    dma_bpc = hw.dram_bytes_per_cycle / hw.cores
+    tasks: list[Task] = []
+
+    def emit(**kw) -> int:
+        tasks.append(Task(**kw))
+        return len(tasks) - 1
+
+    def dma_pages(n, deps=(), tag="", write=False) -> int:
+        nbytes = n * page_b
+        kw = {"dram_write_bytes" if write else "dram_read_bytes": nbytes}
+        return emit(unit="DMA",
+                    cycles=n * hw.dma_page_setup_cycles + nbytes / dma_bpc,
+                    deps=tuple(deps), tag=tag, l1_bytes=nbytes, **kw)
+
+    page_b = hh * page * e * kv_bpe + (hh * 4 if kv_quant else 0)
+    q_b = rows * e * bpe
+
+    def mac(m, k, n, deps, tag) -> int:
+        return emit(unit="MAC", cycles=hh * hw.mac_cycles(m, k, n),
+                    deps=tuple(deps), tag=tag, mac_ops=hh * m * k * n,
+                    l1_bytes=(m * k + k * n + m * n) * hh * bpe)
+
+    n_chunks = -(-w.prompt // chunk)
+    prev_step: tuple[int, ...] = ()
+    for ci in range(n_chunks):
+        q0 = ci * chunk
+        kv_len = min(q0 + chunk, w.prompt)
+        n_needed = -(-kv_len // page)
+        n_full = min((q0 + 1) // page, n_needed)
+        rows_t = g * chunk
+        step_sinks: list[int] = []
+        for ht in range(n_head_tiles):
+            qd = emit(unit="DMA", cycles=q_b / dma_bpc, deps=prev_step,
+                      tag=f"Q{ci}.{ht}", dram_read_bytes=q_b, l1_bytes=q_b)
+            # fully-visible band aggregates into one bulk DMA+MAC pair
+            # (same bytes, same per-page descriptor cycles); only the
+            # straddling pages stay per-page for the in-tile mask
+            c_tasks = []
+            if n_full:
+                kd = dma_pages(n_full, deps=prev_step, tag=f"K{ci}.{ht}b")
+                c_tasks.append(mac(rows_t, e, n_full * page, (qd, kd),
+                                   f"C{ci}.{ht}b"))
+            for j in range(n_full, n_needed):
+                kd = dma_pages(1, deps=prev_step, tag=f"K{ci}.{ht}.{j}")
+                c_tasks.append(mac(rows_t, e, page, (qd, kd),
+                                   f"C{ci}.{ht}.{j}"))
+            # Alg. 3 row-granularity softmax over the visible columns;
+            # straddling pages pay the causal select, int8 the dequant
+            cols = n_needed * page
+            cyc = hw.vec_softmax_cycles(rows, cols)
+            ops = hw.vec_ops_softmax(rows, cols)
+            mask_elems = (n_needed - n_full) * rows * page
+            cyc += mask_elems / hw.vec_lanes * hw.vec_ew_cost
+            ops += mask_elems
+            if kv_quant:
+                cyc += 2 * rows * cols / hw.vec_lanes * hw.vec_ew_cost
+                ops += 2 * rows * cols
+            p = emit(unit="VEC", cycles=cyc, deps=tuple(c_tasks),
+                     tag=f"P{ci}.{ht}", vec_ops=ops,
+                     l1_bytes=2 * rows * cols * bpe)
+            o_last = None
+            if n_full:
+                vd = dma_pages(n_full, deps=prev_step, tag=f"V{ci}.{ht}b")
+                o_last = mac(rows_t, n_full * page, e, (p, vd),
+                             f"O{ci}.{ht}b")
+            for j in range(n_full, n_needed):
+                vd = dma_pages(1, deps=prev_step, tag=f"V{ci}.{ht}.{j}")
+                deps = (p, vd) + ((o_last,) if o_last is not None else ())
+                o_last = mac(rows_t, page, e, deps, f"O{ci}.{ht}.{j}")
+            o_out = emit(unit="DMA", cycles=q_b / dma_bpc, deps=(o_last,),
+                         tag=f"Oout{ci}.{ht}", dram_write_bytes=q_b,
+                         l1_bytes=q_b)
+            # the chunk's own K/V pages written back (int8: quantized)
+            n_cp = -(-(kv_len - q0) // page)
+            wdeps: tuple[int, ...] = prev_step
+            if kv_quant:
+                elems = 2 * hh * chunk * e
+                wdeps = (emit(unit="VEC", tag=f"quant{ci}.{ht}",
+                              deps=prev_step,
+                              cycles=2 * elems / hw.vec_lanes
+                              * hw.vec_ew_cost,
+                              vec_ops=2 * elems, l1_bytes=2 * elems * bpe),)
+            step_sinks += [o_out] + [
+                dma_pages(n_cp, deps=wdeps, tag=f"{which}w{ci}.{ht}",
+                          write=True) for which in ("K", "V")
+            ]
+        # token-budget rule: one decode step over the live slots,
+        # dispatched after the chunk (the engine's single jitted step)
+        dec_barrier = tuple(step_sinks)
+        dq_b = hh * g * e * bpe
+        for s, kv_d in enumerate(w.decode_kv_lens):
+            n_pd = -(-kv_d // page)
+            for ht in range(n_head_tiles):
+                qdd = emit(unit="DMA", cycles=dq_b / dma_bpc,
+                           deps=dec_barrier, tag=f"dQ{ci}.{s}.{ht}",
+                           dram_read_bytes=dq_b, l1_bytes=dq_b)
+                kdd = dma_pages(n_pd, deps=dec_barrier,
+                                tag=f"dK{ci}.{s}.{ht}")
+                sj = mac(g, e, n_pd * page, (qdd, kdd), f"dS{ci}.{s}.{ht}")
+                dcols = n_pd * page
+                dcyc = hw.vec_softmax_cycles(hh * g, dcols)
+                dops = hw.vec_ops_softmax(hh * g, dcols)
+                if kv_quant:
+                    dcyc += (2 * hh * g * dcols / hw.vec_lanes
+                             * hw.vec_ew_cost)
+                    dops += 2 * hh * g * dcols
+                pj = emit(unit="VEC", cycles=dcyc, deps=(sj,),
+                          tag=f"dP{ci}.{s}.{ht}", vec_ops=dops,
+                          l1_bytes=2 * hh * g * dcols * bpe)
+                vdd = dma_pages(n_pd, deps=dec_barrier,
+                                tag=f"dV{ci}.{s}.{ht}")
+                aj = mac(g, n_pd * page, e, (pj, vdd), f"dA{ci}.{s}.{ht}")
+                step_sinks.append(
+                    emit(unit="DMA", cycles=dq_b / dma_bpc, deps=(aj,),
+                         tag=f"dO{ci}.{s}.{ht}", dram_write_bytes=dq_b,
+                         l1_bytes=dq_b))
+        prev_step = tuple(step_sinks)
+    return tasks
+
+
 _BUILDERS = {
     "mas": build_mas,
     "flat": build_flat,
@@ -618,6 +795,7 @@ _BUILDERS = {
     "tileflow": build_tileflow,
     "fusemax": build_fusemax,
     "paged_decode": build_paged_decode,
+    "chunked_prefill": build_chunked_prefill,
 }
 
 
@@ -636,10 +814,30 @@ def tiling_space(w: AttentionWorkload, hw: HWConfig) -> list[Tiling]:
     and sits well below the prefill sub-tile sizes. The KV element
     width joins the decode space as a fourth factor (native vs int8):
     precision is searched exactly like page size (DESIGN.md §5).
+
+    Chunked-prefill workloads add the CHUNK SIZE as a fifth factor
+    (DESIGN.md §6): the prompt-tokens-per-step budget of the mixed
+    scheduler, searched jointly with page size and precision, with
+    ``None`` (monolithic whole-prompt admission) in the space so the
+    search itself decides whether chunking pays.
     """
     heads_core = -(-w.heads // hw.cores)
     hhs = sorted({h for h in (1, 2, 4, 8, 16) if h <= heads_core}
                  | {heads_core})
+    if isinstance(w, ChunkedPrefillWorkload):
+        # Admission schedule: the CHUNK SIZE joins page size, kv-head
+        # tile and precision as the searched factors. ``None`` chunk =
+        # monolithic whole-prompt admission, ranked against the finite
+        # chunks (for long prompts it overflows the §5.6 row buffer and
+        # drops out of the feasible set).
+        pages = sorted({p for p in (16, 32, 64, 128) if p <= w.prompt}
+                       | ({w.prompt} if w.prompt <= 128 else set()))
+        chunks: list[int | None] = [None] + sorted(
+            {c for c in (64, 128, 256, 512, 1024) if c < w.prompt})
+        bpes = sorted({hw.bytes_per_elem, 1})
+        return [Tiling(hh, 1, p, bpe, c)
+                for hh in hhs for p in pages for bpe in bpes
+                for c in chunks]
     if isinstance(w, PagedDecodeWorkload):
         pages = sorted({p for p in (16, 32, 64, 128, 256, 512)
                         if p <= w.seq} | {w.seq})

@@ -109,6 +109,60 @@ class PagedDecodeWorkload:
         return nbytes
 
 
+@dataclasses.dataclass(frozen=True)
+class ChunkedPrefillWorkload:
+    """Admission of one long prompt into a paged pool, co-scheduled with
+    live decode slots (DESIGN.md §6).
+
+    Models the continuous-batching engine's token-budgeted step: per
+    chunk of ``chunk`` prompt tokens (the searchable ``Tiling.chunk``
+    factor), the schedule charges page-granular KV-read DMA for ALL
+    prior context plus the chunk itself, the causal three-band masking
+    on the VEC stream, the paged WRITE traffic for the chunk's own K/V
+    pages (plus a quantize pass for int8 pools), and then one decode
+    step over ``decode_kv_lens`` — the live slots that advance while
+    the prompt is mid-admission.
+
+    ``heads`` counts KV heads; ``group`` is the GQA group (query heads
+    per kv head), so prompt Q rows per kv head are ``group * chunk``.
+    """
+
+    name: str
+    heads: int
+    emb: int
+    prompt: int                        # prompt length in tokens
+    group: int = 1
+    decode_kv_lens: tuple[int, ...] = ()  # live decode slots' cache lens
+    # KV-cache element width. None -> device native; 1 -> int8 pages
+    # with one fp32 scale per page (K and V each) riding the page DMA.
+    kv_bpe: int | None = None
+
+    @property
+    def seq(self) -> int:
+        """Anchors the tiling search space (page and chunk caps)."""
+        return self.prompt
+
+    @property
+    def _score_elems(self) -> int:
+        """Causal triangle of the prompt (useful lower bound)."""
+        return self.prompt * (self.prompt + 1) // 2
+
+    @property
+    def mac_ops(self) -> int:
+        """Useful MACs: prefill QK^T + PV over the causal triangle plus
+        the interleaved decode steps over live cache entries."""
+        prefill = 2 * self.heads * self.group * self._score_elems * self.emb
+        decode = 2 * self.heads * self.group * sum(self.decode_kv_lens) \
+            * self.emb
+        return prefill + decode
+
+    @property
+    def softmax_elems(self) -> int:
+        return self.heads * self.group * (
+            self._score_elems + sum(self.decode_kv_lens)
+        )
+
+
 # Table 1: Network Configuration and Hyper-Parameters.
 PAPER_NETWORKS = {
     "bert-base-t5-base": AttentionWorkload("bert-base-t5-base", 12, 512, 64),

@@ -1,0 +1,422 @@
+"""Chunked paged prefill + mixed prefill/decode scheduling (DESIGN.md §6).
+
+Four layers of the subsystem are pinned here:
+
+* the chunked prefill kernel (pallas interpret mode) and its XLA gather
+  twin must match the causal attention oracle for any chunk size /
+  q_offset / ragged tail / GQA group / pool permutation, fp32 and int8
+  (incl. a hypothesis sweep);
+* ``prefill_chunk`` walked over a whole prompt must reproduce the
+  monolithic ``prefill`` + ``write_prefill_pages`` path exactly: same
+  page contents (and scales), same first token, at every chunk size
+  including ragged last chunks;
+* the engine scheduler: chunked admission stays token-for-token equal
+  to the wave engine, decode slots advance while a long prompt is
+  mid-chunk, and TTFT ordering is FIFO;
+* the simulator/search: the chunked-prefill schedule charges
+  page-granular prior-context reads + paged write traffic, and the
+  chunk size is searched as a fifth tiling factor — finite for long
+  prompts (the §5.6 row buffer bounds it), whole-prompt for short ones.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.common import quantize_q8
+from repro.kernels.ops import paged_prefill_attention
+from repro.models.attention import paged_prefill_attention as model_paged
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: pallas vs XLA twin vs causal oracle
+# ---------------------------------------------------------------------------
+
+
+def _make_pool(kd, vd, page_size, rng, quantize=False):
+    """Scatter dense (Hkv, S, E) K/V into a shuffled single-seq pool."""
+    hkv, s, e = kd.shape
+    mp = s // page_size
+    perm = rng.permutation(np.arange(1, mp + 1))
+    table = perm.astype(np.int32)
+    dt = np.int8 if quantize else kd.dtype
+    k_pool = np.zeros((hkv, mp + 1, page_size, e), dt)
+    v_pool = np.zeros((hkv, mp + 1, page_size, e), dt)
+    scales = {"k": np.zeros((hkv, mp + 1), np.float32),
+              "v": np.zeros((hkv, mp + 1), np.float32)}
+    for j in range(mp):
+        for which, pool, dense in (("k", k_pool, kd), ("v", v_pool, vd)):
+            blk = dense[:, j * page_size:(j + 1) * page_size]
+            if quantize:
+                q, sc = quantize_q8(jnp.asarray(blk), (-2, -1))
+                pool[:, table[j]] = np.asarray(q)
+                scales[which][:, table[j]] = np.asarray(sc)
+            else:
+                pool[:, table[j]] = blk
+    return k_pool, v_pool, table, scales
+
+
+def _check_chunk_parity(seed, group, hkv, page_size, mp, e, chunk, q0,
+                        clen, quantize=False):
+    rng = np.random.default_rng(seed)
+    s = page_size * mp
+    hq = group * hkv
+    kv_len = q0 + clen
+    assert kv_len <= s
+    q = jnp.asarray(rng.standard_normal((hq, chunk, e)), jnp.float32)
+    kd = rng.standard_normal((hkv, s, e)).astype(np.float32)
+    vd = rng.standard_normal((hkv, s, e)).astype(np.float32)
+    k_pool, v_pool, table, scales = _make_pool(kd, vd, page_size, rng,
+                                               quantize)
+    kw = {}
+    if quantize:
+        kw = dict(k_scales=jnp.asarray(scales["k"]),
+                  v_scales=jnp.asarray(scales["v"]))
+    args = (q, jnp.asarray(k_pool), jnp.asarray(v_pool), jnp.asarray(table),
+            jnp.int32(q0), jnp.int32(kv_len))
+    out_pallas = np.asarray(paged_prefill_attention(*args, **kw))
+    out_xla = np.asarray(model_paged(*args, **kw))
+    # live rows only: pad rows past clen are unspecified (callers slice)
+    np.testing.assert_allclose(
+        out_pallas[:, :clen], out_xla[:, :clen], atol=2e-5, rtol=2e-5,
+        err_msg=f"twin mismatch q0={q0} clen={clen}",
+    )
+    if quantize:
+        # oracle on the dequantized pool
+        kd = np.zeros_like(kd)
+        vd = np.zeros_like(vd)
+        for j in range(mp):
+            pid = table[j]
+            sl = slice(j * page_size, (j + 1) * page_size)
+            kd[:, sl] = (k_pool[:, pid].astype(np.float32)
+                         * scales["k"][:, pid, None, None])
+            vd[:, sl] = (v_pool[:, pid].astype(np.float32)
+                         * scales["v"][:, pid, None, None])
+    want = np.asarray(ref.attention(
+        q[None], jnp.asarray(kd[None]), jnp.asarray(vd[None]),
+        causal=True, kv_len=kv_len, q_offset=q0,
+    ))[0]
+    np.testing.assert_allclose(
+        out_pallas[:, :clen], want[:, :clen], atol=2e-5, rtol=2e-5,
+        err_msg=f"oracle mismatch q0={q0} clen={clen}",
+    )
+
+
+@pytest.mark.parametrize("group,hkv", [(1, 2), (2, 2), (4, 1)])
+@pytest.mark.parametrize("chunk,q0,clen", [
+    (8, 0, 8),     # first chunk: everything straddles the diagonal
+    (8, 16, 8),    # interior chunk: fully-visible band + straddle
+    (8, 24, 5),    # ragged last chunk: pad rows + kv_len tail
+    (16, 16, 11),  # chunk spanning several pages, ragged
+])
+def test_chunked_prefill_kernel_matches_twin_and_oracle(group, hkv, chunk,
+                                                        q0, clen):
+    _check_chunk_parity(seed=group * 31 + chunk + q0, group=group, hkv=hkv,
+                        page_size=8, mp=4, e=16, chunk=chunk, q0=q0,
+                        clen=clen)
+
+
+@pytest.mark.parametrize("chunk,q0,clen", [(8, 8, 8), (8, 24, 5)])
+def test_chunked_prefill_kernel_int8(chunk, q0, clen):
+    _check_chunk_parity(seed=chunk + q0, group=2, hkv=2, page_size=8, mp=4,
+                        e=16, chunk=chunk, q0=q0, clen=clen, quantize=True)
+
+
+def test_chunked_prefill_hypothesis():
+    """Randomized sweep over chunk size / offset / ragged tails / pools."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    dims = st.tuples(
+        st.sampled_from([(1, 1), (2, 1), (2, 2), (4, 2)]),  # (group, hkv)
+        st.sampled_from([8, 16]),           # page_size
+        st.integers(2, 4),                  # pages in the pool
+        st.sampled_from([8, 16]),           # chunk
+        st.integers(0, 3),                  # chunk index (clamped)
+        st.integers(1, 16),                 # clen (clamped)
+        st.booleans(),                      # int8 pool
+        st.integers(0, 2**31 - 1),          # seed
+    )
+
+    @given(dims)
+    @settings(max_examples=12, deadline=None)
+    def check(t):
+        (group, hkv), ps, mp, chunk, ci, clen, quantize, seed = t
+        s = ps * mp
+        q0 = min(ci * chunk, max(s - chunk, 0))
+        clen = max(1, min(clen, chunk, s - q0))
+        _check_chunk_parity(seed, group, hkv, ps, mp, 16, chunk, q0, clen,
+                            quantize)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# model: chunked walk == monolithic prefill + scatter
+# ---------------------------------------------------------------------------
+
+
+def _smoke_model():
+    from repro.configs import get_smoke
+    from repro.models import build_model
+
+    cfg = get_smoke("internlm2-1.8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _chunked_prefill(model, cfg, params, prompt, cache, ids, table, chunk,
+                     ps):
+    plen = prompt.shape[0]
+    q0 = 0
+    last = None
+    while q0 < plen:
+        clen = min(chunk, plen - q0)
+        ct = np.ones((1, chunk), np.int32)
+        ct[0, :clen] = prompt[q0:q0 + clen]
+        p0 = q0 // ps
+        cpages = [ids[p] if p < len(ids) else 0
+                  for p in range(p0, p0 + chunk // ps)]
+        last, cache = model.prefill_chunk(
+            params, cfg, jnp.asarray(ct), cache, jnp.asarray(table),
+            jnp.asarray(cpages, jnp.int32), jnp.int32(q0), jnp.int32(clen))
+        q0 += clen
+    return last, cache
+
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_prefill_chunk_matches_monolithic(kv_dtype, chunk):
+    """Every chunk size (incl. ragged last chunks) reproduces the dense
+    prefill + write_prefill_pages page contents and first token."""
+    cfg, model, params = _smoke_model()
+    ps, max_len, plen = 8, 32, 21  # 21: ragged at every chunk size
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(3, cfg.vocab_size, size=(plen,)).astype(np.int32)
+    ids = [1, 2, 3]
+    n_pp = -(-plen // ps)
+    assert n_pp == len(ids)
+
+    logits, dense = model.prefill(params, cfg, jnp.asarray(prompt[None]),
+                                  n_pp * ps, kv_dtype=None)
+    cache_m = model.make_cache(1, max_len, cache_layout="paged",
+                               page_size=ps, kv_dtype=kv_dtype)
+    cache_m = model.write_prefill_pages(cache_m, dense,
+                                        jnp.asarray(ids, jnp.int32))
+    tok_m = int(jnp.argmax(logits[0, -1]))
+
+    cache_c = model.make_cache(1, max_len, cache_layout="paged",
+                               page_size=ps, kv_dtype=kv_dtype)
+    table = np.zeros((max_len // ps,), np.int32)
+    table[:n_pp] = ids
+    last, cache_c = _chunked_prefill(model, cfg, params, prompt, cache_c,
+                                     ids, table, chunk, ps)
+    assert int(jnp.argmax(last[0])) == tok_m
+
+    blk_m = cache_m["units"]["b0"]
+    blk_c = cache_c["units"]["b0"]
+    for which in ("k", "v"):
+        if kv_dtype == "int8":
+            got = np.asarray(blk_c[which][:, :, ids], np.float32) \
+                * np.asarray(blk_c[f"{which}_scale"][:, :, ids])[..., None,
+                                                                 None]
+            want = np.asarray(blk_m[which][:, :, ids], np.float32) \
+                * np.asarray(blk_m[f"{which}_scale"][:, :, ids])[..., None,
+                                                                 None]
+            # layer 0 sees identical inputs, so its pages are
+            # bit-identical to the monolithic scatter: whole pages
+            # quantized once, ragged tail zeroed before the absmax
+            # (§5 invariant). Deeper layers attend through the
+            # QUANTIZED pool (the memory-bound design point — the
+            # monolithic path attended at full precision and quantized
+            # only at scatter time), so their pages agree to a
+            # quantization rounding step, not bitwise.
+            np.testing.assert_array_equal(
+                np.asarray(blk_m[which][0][:, ids]),
+                np.asarray(blk_c[which][0][:, ids]), err_msg=which)
+            np.testing.assert_allclose(got, want, atol=0.1, rtol=0.0,
+                                       err_msg=which)
+        else:
+            np.testing.assert_allclose(
+                np.asarray(blk_m[which][:, :, ids], np.float32),
+                np.asarray(blk_c[which][:, :, ids], np.float32),
+                atol=2e-2, rtol=2e-2, err_msg=which)
+
+
+# ---------------------------------------------------------------------------
+# engine: mixed scheduler behavior + wave-engine equivalence
+# ---------------------------------------------------------------------------
+
+
+def _requests(cfg, spec):
+    from repro.serving import Request
+
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    prompt=rng.integers(3, cfg.vocab_size,
+                                        size=(n,)).astype(np.int32),
+                    max_new_tokens=m, eos_id=-2)
+            for i, (n, m) in enumerate(spec)]
+
+
+@pytest.mark.parametrize("chunk", [8, 16])
+def test_chunked_engine_matches_wave_engine(chunk):
+    """Token-for-token equality incl. a multi-chunk long prompt."""
+    from repro.serving import ContinuousBatchingEngine, ServingEngine
+
+    cfg, model, params = _smoke_model()
+    spec = [(5, 4), (29, 3), (9, 3), (13, 1), (21, 4)]
+    out_w = ServingEngine(model, params, max_len=40,
+                          batch_size=2).serve(_requests(cfg, spec))
+    eng = ContinuousBatchingEngine(model, params, max_len=40, batch_size=2,
+                                   page_size=4, chunk_size=chunk)
+    out_c = eng.serve(_requests(cfg, spec))
+    assert set(out_c) == set(out_w)
+    for rid in out_w:
+        np.testing.assert_array_equal(out_w[rid], out_c[rid],
+                                      err_msg=f"rid {rid}")
+
+
+def test_decode_advances_while_prompt_mid_chunk():
+    """A long prompt's admission must not stall live decode slots."""
+    from repro.serving import ContinuousBatchingEngine
+
+    cfg, model, params = _smoke_model()
+    # short request decodes 8 tokens while the long prompt (4 chunks)
+    # is admitted into the second slot
+    spec = [(5, 8), (29, 2)]
+    eng = ContinuousBatchingEngine(model, params, max_len=40, batch_size=2,
+                                   page_size=4, chunk_size=8)
+    out = eng.serve(_requests(cfg, spec))
+    assert len(out[0]) == 8 and len(out[1]) == 2
+    mixed = [e for e in eng.step_log
+             if e["prefill_in_flight"] and e["live_decode"] > 0]
+    assert len(mixed) >= 3  # the long prompt needs 4 chunks; slot 0 live
+
+
+def test_ttft_ordering_is_fifo():
+    """First tokens come out in queue order (single prefill stream)."""
+    from repro.serving import ContinuousBatchingEngine
+
+    cfg, model, params = _smoke_model()
+    spec = [(29, 2), (5, 2), (9, 2), (21, 2), (6, 2)]
+    eng = ContinuousBatchingEngine(model, params, max_len=40, batch_size=2,
+                                   page_size=4, chunk_size=8)
+    out = eng.serve(_requests(cfg, spec))
+    assert all(len(v) == 2 for v in out.values())
+    firsts = [eng.token_walltimes[rid][0] for rid in range(len(spec))]
+    assert firsts == sorted(firsts)
+
+
+def test_engine_has_no_dense_prefill_path():
+    """The admit path runs on prefill_chunk alone: no dense batch-1
+    cache, no write_prefill_pages scatter (ISSUE 4 acceptance)."""
+    import inspect
+
+    from repro.serving import engine as engine_mod
+
+    src = inspect.getsource(engine_mod.ContinuousBatchingEngine)
+    assert "write_prefill_pages" not in src
+    assert "model.prefill(" not in src and "self._prefill(" not in src
+    assert "prefill_chunk" in src
+
+
+# ---------------------------------------------------------------------------
+# simulator + search: chunk size as a tiling factor
+# ---------------------------------------------------------------------------
+
+
+def test_sim_chunked_prefill_charges_reread_and_write_traffic():
+    from repro.sim import (
+        EDGE_HW,
+        ChunkedPrefillWorkload,
+        Tiling,
+        build_schedule,
+        simulate,
+    )
+
+    w = ChunkedPrefillWorkload("admit", heads=8, emb=64, group=4,
+                               prompt=512, decode_kv_lens=(100, 300))
+    fine = simulate(build_schedule("chunked_prefill", w,
+                                   Tiling(1, 1, 32, None, 64), EDGE_HW),
+                    EDGE_HW)
+    coarse = simulate(build_schedule("chunked_prefill", w,
+                                     Tiling(1, 1, 32, None, 128), EDGE_HW),
+                      EDGE_HW)
+    # smaller chunks re-read the prior context more often
+    assert fine.dram_read_bytes > coarse.dram_read_bytes
+    # the chunk's own K/V pages are written back page-granularly:
+    # at least K+V for the whole prompt, plus per-chunk O tiles
+    hw_bpe = EDGE_HW.bytes_per_elem
+    heads_core = -(-w.heads // EDGE_HW.cores)
+    kv_write = 2 * heads_core * 512 * w.emb * hw_bpe
+    for r in (fine, coarse):
+        assert r.dram_write_bytes > kv_write * EDGE_HW.cores // 2
+        assert r.mac_ops >= w.mac_ops  # useful-MAC lower bound holds
+    # int8 pools move fewer bytes and pay the quantize/dequant VEC work
+    wq = ChunkedPrefillWorkload("admit8", heads=8, emb=64, group=4,
+                                prompt=512, decode_kv_lens=(100, 300),
+                                kv_bpe=1)
+    q = simulate(build_schedule("chunked_prefill", wq,
+                                Tiling(1, 1, 32, None, 64), EDGE_HW),
+                 EDGE_HW)
+    assert q.dram_read_bytes < 0.6 * fine.dram_read_bytes
+    assert q.vec_ops > fine.vec_ops
+
+
+def test_sim_chunk_search_selects_finite_chunk_for_long_prompt():
+    """Whole-prompt admission of a long prompt overflows the §5.6 row
+    buffer, so the search must land on a finite chunk; short prompts
+    keep monolithic admission."""
+    from repro.sim import (
+        EDGE_HW,
+        ChunkedPrefillWorkload,
+        Tiling,
+        build_schedule,
+        search_tiling,
+    )
+
+    w = ChunkedPrefillWorkload("long", heads=8, emb=128, group=4,
+                               prompt=2048, decode_kv_lens=(700, 123, 511))
+    res = search_tiling("chunked_prefill", w, EDGE_HW, strategy="grid")
+    assert res.tiling.chunk is not None and res.tiling.chunk < w.prompt
+    assert build_schedule("chunked_prefill", w,
+                          Tiling(1, 1, res.tiling.nkv, None, None),
+                          EDGE_HW) is None  # monolithic: infeasible
+    short = ChunkedPrefillWorkload("short", heads=8, emb=128, group=4,
+                                   prompt=128)
+    rs = search_tiling("chunked_prefill", short, EDGE_HW, strategy="grid")
+    assert rs.tiling.chunk is None  # whole-prompt admission wins
+
+
+def test_search_genomes_carry_chunk_gene():
+    """MCTS and GA search the widened 5-gene space and return feasible
+    chunked tilings."""
+    from repro.sim import ChunkedPrefillWorkload, EDGE_HW, search_tiling
+
+    w = ChunkedPrefillWorkload("long", heads=8, emb=128, group=4,
+                               prompt=2048, decode_kv_lens=(700,))
+    for strategy, iters in (("mcts", 60), ("ga", 40)):
+        res = search_tiling("chunked_prefill", w, EDGE_HW,
+                            strategy=strategy, iters=iters)
+        assert res.tiling.chunk is not None
+        assert res.tiling.chunk < w.prompt, strategy
+
+
+def test_tune_prefill_chunk_analytical_default():
+    from repro.core.autotune import tune_prefill_chunk
+
+    c = tune_prefill_chunk(b_h=16, n_ctx=4096, e=128, page=16)
+    assert c % 16 == 0 and 16 <= c <= 4096
+    # a tighter ITL target forces smaller chunks; a looser one larger
+    tight = tune_prefill_chunk(b_h=16, n_ctx=4096, e=128, page=16,
+                               step_seconds_target=2e-4)
+    loose = tune_prefill_chunk(b_h=16, n_ctx=4096, e=128, page=16,
+                               step_seconds_target=1.0)
+    assert tight <= c <= loose
+    assert loose == 4096  # no ITL pressure: monolithic admission
