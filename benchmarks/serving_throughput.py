@@ -42,7 +42,15 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.models import build_model
-from repro.serving import ContinuousBatchingEngine, Request, ServingEngine
+from repro.serving import (
+    NO_FAULTS,
+    ContinuousBatchingEngine,
+    PoolAuditor,
+    Request,
+    RequestState,
+    ScriptedFaults,
+    ServingEngine,
+)
 from repro.sim import (
     EDGE_HW,
     ChunkedPrefillWorkload,
@@ -103,10 +111,10 @@ def _latency_stats(engine, requests) -> dict:
 
 def _timed(engine, requests) -> tuple[dict, float, dict]:
     engine.serve([Request(**r.__dict__) for r in requests])  # warm-up
-    # best-of-2 timed passes: damps host scheduling jitter so the CI
+    # best-of-3 timed passes: damps host scheduling jitter so the CI
     # bench-regression guard compares serving-path changes, not noise
     best = lat = None
-    for _ in range(2):
+    for _ in range(3):
         t0 = time.perf_counter()
         out = engine.serve([Request(**r.__dict__) for r in requests])
         sec = time.perf_counter() - t0
@@ -132,6 +140,31 @@ def run(n_requests: int) -> dict:
     for rid in out_d:  # both engines must produce identical greedy output
         np.testing.assert_array_equal(out_d[rid], out_c[rid])
     tokens = sum(len(v) for v in out_d.values())
+
+    # --- recompute preemption under an injected mid-run exhaustion burst
+    # (DESIGN.md §7): three pool-exhaustion faults spread across the run
+    # evict live requests mid-decode; the scheduler re-prefills
+    # prompt+generated, so the output must stay token-for-token identical
+    # to the uncontended pass with ZERO failed requests, the auditor
+    # checking the page accounting after every step.
+    n_appends = sum(len(v) - 1 for v in out_c.values())
+    burst = frozenset({n_appends // 4, n_appends // 2, (3 * n_appends) // 4})
+    aud = PoolAuditor()
+    paged.injector = ScriptedFaults(exhaust_at_appends=burst)
+    paged.auditor = aud
+    try:
+        t0 = time.perf_counter()
+        out_p = paged.serve([Request(**r.__dict__) for r in requests])
+        sec_p = time.perf_counter() - t0
+        lat_p = _latency_stats(paged, requests)
+    finally:
+        paged.injector = NO_FAULTS
+        paged.auditor = None
+    for rid in out_c:  # preempted + recomputed == uncontended, exactly
+        np.testing.assert_array_equal(out_c[rid], out_p[rid])
+    failed_p = sum(1 for rec in paged.results.values()
+                   if rec.state is RequestState.FAILED)
+    tokens_p = sum(len(v) for v in out_p.values())
 
     itemsize = jnp.dtype(cfg.compute_dtype).itemsize
     dense_kv = (2 * cfg.num_layers * BATCH * cfg.num_kv_heads * MAX_LEN
@@ -189,7 +222,25 @@ def run(n_requests: int) -> dict:
                 * page_bytes if paged.occupancy_log else 0.0,
             },
         },
+        "preemption": {
+            "burst_appends": sorted(burst),
+            "preemptions": paged.preemption_count,
+            "recompute_tokens": paged.recompute_tokens,
+            "failed_requests": failed_p,
+            "seconds": sec_p,
+            "tokens_per_s": tokens_p / sec_p,
+            **lat_p,
+            "ttft_inflation_p95": (lat_p["ttft_s"]["p95"]
+                                   / lat_c["ttft_s"]["p95"]
+                                   if lat_c["ttft_s"]["p95"] else 0.0),
+            "pages_leaked": paged._mgr.pages_used,
+            "auditor_steps": aud.steps_checked,
+        },
         "throughput_ratio": sec_d / sec_c,
+        # throughput retained under the injected preemption burst
+        # (preempted tok/s / uncontended tok/s; guarded by
+        # check_bench_regression.py --preempt-threshold)
+        "preemption_ratio": (tokens_p / sec_p) / (tokens / sec_c),
         # machine-normalized TTFT win: wave p50 / continuous p50 within
         # the same process (guarded by check_bench_regression.py)
         "ttft_ratio": ttft_ratio,
@@ -222,6 +273,8 @@ def main(emit, n_requests: int = 12) -> dict:
         f"speedup={report['throughput_ratio']:.2f}x "
         f"ttft={report['ttft_ratio']:.2f}x "
         f"kv_bytes={report['kv_bytes_ratio']:.2f}x_dense "
+        f"preempt={report['preemption']['preemptions']} "
+        f"recompute={report['preemption']['recompute_tokens']}tok "
         f"sim_page={report['sim_page_search']['best_page_size']} "
         f"sim_chunk={report['sim_chunk_search']['best_chunk']}",
     )
@@ -241,3 +294,11 @@ if __name__ == "__main__":
           f"peak KV {c['peak_kv_bytes']:8d} B "
           f"(pool {c['pool_bytes']} B, {c['peak_pages_used']} pages, "
           f"chunk {c['chunk_size']})")
+    p = r["preemption"]
+    print(f"preemption burst: {p['tokens_per_s']:8.1f} tok/s  "
+          f"p95 TTFT x{p['ttft_inflation_p95']:.2f}  "
+          f"{p['preemptions']} preemptions, "
+          f"{p['recompute_tokens']} recompute tok, "
+          f"{p['failed_requests']} failed, "
+          f"{p['pages_leaked']} pages leaked "
+          f"({p['auditor_steps']} steps audited)")

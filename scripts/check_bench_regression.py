@@ -1,7 +1,7 @@
 """Fail CI when serving throughput OR TTFT regresses vs the baseline.
 
 Usage: check_bench_regression.py BASELINE.json CURRENT.json
-           [--threshold F] [--ttft-threshold F]
+           [--threshold F] [--ttft-threshold F] [--preempt-threshold F]
 
 Guards the paged-continuous tokens/s AND p50 time-to-first-token of a
 freshly produced BENCH_serving.json against the committed one. Raw
@@ -18,6 +18,12 @@ when either ratio drops more than its threshold (default 10% / 35% —
 TTFT percentiles are noisier than aggregate tokens/s) below the
 baseline; absolute numbers are printed informationally. Baselines
 missing ``ttft_ratio`` (pre-chunked-prefill) skip that guard.
+
+``preemption_ratio`` — throughput retained under the benchmark's
+injected mid-run exhaustion burst (preempted tok/s / uncontended tok/s,
+same process: machine-normalized like the others) — is guarded the same
+way so recompute-preemption overhead can't silently grow
+(DESIGN.md §7). Baselines missing the key (pre-lifecycle) skip it.
 """
 
 from __future__ import annotations
@@ -37,6 +43,9 @@ def main() -> int:
     ap.add_argument("--ttft-threshold", type=float, default=0.35,
                     help="max fractional normalized p50-TTFT-ratio drop "
                          "allowed")
+    ap.add_argument("--preempt-threshold", type=float, default=0.25,
+                    help="max fractional drop allowed in throughput "
+                         "retained under the injected preemption burst")
     args = ap.parse_args()
 
     # An empty/unreadable baseline (e.g. `git show` truncated the temp
@@ -97,6 +106,21 @@ def main() -> int:
     else:
         print("bench-guard: no ttft_ratio in one of the files; "
               "skipping TTFT guard")
+
+    b_pre = base.get("preemption_ratio")
+    c_pre = cur.get("preemption_ratio")
+    if b_pre and c_pre is not None:
+        pre_drop = 1.0 - c_pre / b_pre
+        print(f"bench-guard: throughput retained under preemption burst: "
+              f"{b_pre:.2f}x -> {c_pre:.2f}x ({-pre_drop:+.1%})")
+        if pre_drop > args.preempt_threshold:
+            print(f"bench-guard: preemption-burst throughput ratio "
+                  f"dropped {pre_drop:.1%} > {args.preempt_threshold:.0%} "
+                  f"vs committed baseline", file=sys.stderr)
+            return 1
+    else:
+        print("bench-guard: no preemption_ratio in one of the files; "
+              "skipping preemption guard")
     print("bench-guard: ok")
     return 0
 

@@ -8,14 +8,15 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # Fast-fail signal on the paged serving + quantized-KV + chunked
-# prefill subsystems before the full suite; the full run skips them to
-# avoid paying the jit compiles twice.
+# prefill + request-lifecycle subsystems before the full suite; the
+# full run skips them to avoid paying the jit compiles twice.
 python -m pytest -x -q tests/test_paged_cache.py tests/test_quantized_kv.py \
-  tests/test_chunked_prefill.py
+  tests/test_chunked_prefill.py tests/test_lifecycle.py
 
 python -m pytest -x -q --ignore=tests/test_paged_cache.py \
   --ignore=tests/test_quantized_kv.py \
-  --ignore=tests/test_chunked_prefill.py
+  --ignore=tests/test_chunked_prefill.py \
+  --ignore=tests/test_lifecycle.py
 
 # Serving smoke: dense-wave vs chunked-paged-continuous on a mixed
 # LONG/SHORT request set (asserts output equivalence, writes
@@ -28,8 +29,29 @@ git show HEAD:BENCH_serving.json > "$BENCH_BASELINE" 2>/dev/null \
   || cp BENCH_serving.json "$BENCH_BASELINE" 2>/dev/null || true
 python benchmarks/serving_throughput.py --smoke
 python scripts/check_bench_regression.py "$BENCH_BASELINE" \
-  BENCH_serving.json --threshold 0.10 --ttft-threshold 0.35
+  BENCH_serving.json --threshold 0.10 --ttft-threshold 0.35 \
+  --preempt-threshold 0.25
 rm -f "$BENCH_BASELINE"
+
+# Lifecycle hard gates (DESIGN.md §7): the benchmark's injected mid-run
+# exhaustion burst must complete every request through recompute
+# preemption — zero FAILED results, zero leaked pages, at least one
+# actual preemption exercised, and bounded p95 TTFT inflation (a
+# generous smoke-machine bound; the regression guard above tracks the
+# tight normalized ratio against the committed baseline).
+python - <<'PY'
+import json
+
+p = json.load(open("BENCH_serving.json"))["preemption"]
+assert p["preemptions"] >= 1, f"burst exercised no preemption: {p}"
+assert p["failed_requests"] == 0, f"requests failed under preemption: {p}"
+assert p["pages_leaked"] == 0, f"page leak after preemption drain: {p}"
+assert p["auditor_steps"] > 0, f"pool auditor never ran: {p}"
+assert p["ttft_inflation_p95"] < 10.0, f"pathological TTFT inflation: {p}"
+print(f"lifecycle gates OK: {p['preemptions']} preemptions, "
+      f"{p['recompute_tokens']} recompute tokens, "
+      f"p95 TTFT x{p['ttft_inflation_p95']:.2f}")
+PY
 
 # Int8 KV-cache smoke: greedy agreement + simulated decode speedup vs
 # the bf16 paged baseline (writes BENCH_quant.json).

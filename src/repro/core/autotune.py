@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 
 from repro.core.policy import (
     DEFAULT_VMEM_BUDGET,
@@ -139,6 +140,36 @@ def tune_prefill_chunk(*, b_h: int, n_ctx: int, e: int, itemsize: int = 2,
             best = chunk
         c *= 2
     return best
+
+
+@functools.lru_cache(maxsize=1024)
+def tune_pool_headroom(*, num_slots: int, chunk_pages: int,
+                       preempt_rate: float = 0.25) -> int:
+    """Free pages held back from fresh admissions when the serving pool
+    runs hot (``decode_reserve_frac`` < 1, DESIGN.md §7).
+
+    A preemption evicts the youngest live request and re-admits it at
+    the queue head with its FULL remaining budget — but re-admission
+    still needs free pages, and if fresh traffic can drain the pool to
+    zero the victim waits behind the very churn that evicted it
+    (recompute convoy). The headroom sizes the reserve analytically:
+    ``preempt_rate`` is the expected fraction of slots mid-recompute at
+    once, and each recompute stream runs ``chunk_pages`` pages of
+    re-prefill ahead of its pinned allocation, so
+
+        headroom = ceil(preempt_rate * num_slots) * chunk_pages
+
+    pages keep every concurrent recompute admissible without touching
+    the steady-state capacity fresh requests compete for. Only resumed
+    requests may dip into the reserve. The same churn is charged to the
+    tiling search through ``ChunkedPrefillWorkload.preempt_rate``, so a
+    searched pool size already prices the recompute traffic this
+    headroom protects.
+    """
+    if preempt_rate <= 0:
+        return 0
+    inflight = max(1, math.ceil(preempt_rate * num_slots))
+    return inflight * max(1, chunk_pages)
 
 
 @functools.lru_cache(maxsize=1024)

@@ -3,12 +3,45 @@ from repro.serving.engine import (
     Request,
     ServingEngine,
 )
-from repro.serving.paged_cache import PagedKVCacheManager, PagePoolExhausted
+from repro.serving.faults import (
+    NO_FAULTS,
+    FaultInjector,
+    PoolAuditError,
+    PoolAuditor,
+    ScriptedFaults,
+    SeededFaults,
+)
+from repro.serving.lifecycle import (
+    LifecycleError,
+    RequestRecord,
+    RequestState,
+    validate_request,
+)
+from repro.serving.paged_cache import (
+    PageAccountingError,
+    PagedCacheError,
+    PagedKVCacheManager,
+    PagePoolExhausted,
+    PoolConfigError,
+)
 
 __all__ = [
     "ServingEngine",
     "ContinuousBatchingEngine",
     "Request",
+    "RequestRecord",
+    "RequestState",
+    "LifecycleError",
+    "validate_request",
+    "FaultInjector",
+    "ScriptedFaults",
+    "SeededFaults",
+    "NO_FAULTS",
+    "PoolAuditor",
+    "PoolAuditError",
     "PagedKVCacheManager",
+    "PagedCacheError",
     "PagePoolExhausted",
+    "PageAccountingError",
+    "PoolConfigError",
 ]

@@ -16,6 +16,18 @@ prefill writes straight into the allocated pages (no dense batch-1
 cache, no copy-on-admit scatter, one compile shape per step kind), and
 long prompts no longer head-of-line-block decode.
 
+Both engines run every request through the lifecycle state machine of
+``serving/lifecycle.py`` (DESIGN.md §7): malformed requests become one
+FAILED result instead of an exception that kills the wave, deadlines
+and cancellation retire live slots mid-decode, a jitted finite-logit
+guard isolates a NaN/inf step to its slot, and — on the paged engine —
+mid-decode pool exhaustion preempts the youngest live request
+(release + requeue + chunked re-prefill of prompt+generated, so greedy
+determinism keeps the continuation token-for-token identical) instead
+of crashing the batch. Fault injection (``serving/faults.py``) threads
+through both engines behind a no-op default; ``engine.auditor`` runs
+the page-pool invariant check after every step when set.
+
 Both engines record per-token wall-clock timestamps
 (``token_walltimes``) so benchmarks can report time-to-first-token and
 inter-token latency next to tokens/s.
@@ -23,8 +35,8 @@ inter-token latency next to tokens/s.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
+import itertools
 import time
 from collections import deque
 
@@ -32,21 +44,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.autotune import tune_prefill_chunk
+from repro.core.autotune import tune_pool_headroom, tune_prefill_chunk
 from repro.models.api import Model
+from repro.serving.faults import NO_FAULTS
+from repro.serving.lifecycle import (
+    Request,
+    RequestRecord,
+    RequestState,
+    TERMINAL_STATES,
+    validate_request,
+)
 from repro.serving.paged_cache import (
     SCRATCH_PAGE,
     PagedKVCacheManager,
+    PagePoolExhausted,
     page_footprint_bytes,
 )
 
+__all__ = ["Request", "ServingEngine", "ContinuousBatchingEngine"]
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray           # (len,) int32
-    max_new_tokens: int = 16
-    eos_id: int = 2
+
+def _finite_rows(logits):
+    """(rows, V) -> (rows,) bool: the cheap jitted NaN/inf guard on a
+    step's output logits. Runs inside the step dispatch, so detection
+    costs one reduction — no extra host transfer."""
+    return jnp.all(jnp.isfinite(logits), axis=-1)
 
 
 class ServingEngine:
@@ -62,6 +84,11 @@ class ServingEngine:
         self.kv_dtype = jnp.dtype(kv_dtype) if kv_dtype is not None else None
         self.token_walltimes: dict[int, list[float]] = {}
         self.serve_t0 = 0.0
+        # lifecycle + fault harness (DESIGN.md §7); injector defaults to
+        # the shared no-op, results hold one RequestRecord per rid
+        self.injector = NO_FAULTS
+        self.results: dict[int, RequestRecord] = {}
+        self._step_idx = 0
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, model.cfg, t, c, pos)
         )
@@ -72,36 +99,71 @@ class ServingEngine:
             lambda p, t: model.prefill(p, model.cfg, t, self.max_len,
                                        kv_dtype=self.kv_dtype)
         )
-        # argmax + dummy-row pad, jitted once per distinct n_real (the
-        # static arg) instead of a fresh closure retracing per wave
+        # argmax + finite-guard + dummy-row pad, jitted once per distinct
+        # n_real (the static arg) instead of a fresh closure per wave
         batch = batch_size
 
         @functools.partial(jax.jit, static_argnums=1)
         def next_token(logits, n_real):
-            live = jnp.argmax(logits[:n_real, -1], axis=-1).astype(
-                jnp.int32
-            )[:, None]
+            # ``packed`` rides tokens + finite-guard flags in ONE int32
+            # array so the host loop pays a single device sync per step
+            last = logits[:n_real, -1]
+            live = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+            packed = jnp.concatenate([live[:, 0],
+                                      _finite_rows(last).astype(jnp.int32)])
             if n_real == batch:
-                return live
+                return live, packed
             pad = jnp.ones((batch - n_real, 1), jnp.int32)
-            return jnp.concatenate([live, pad])
+            return jnp.concatenate([live, pad]), packed
 
         self._next_token = next_token
 
     def _prefill(self, tokens):
         return self._prefill_fn(self.params, tokens)
 
+    def _record(self, r: Request) -> RequestRecord:
+        rec = self.results.get(r.rid)
+        if rec is None or rec.request is not r:
+            rec = RequestRecord(r)
+            self.results[r.rid] = rec
+        return rec
+
     def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
-        """Bucket by prompt length, serve each bucket as batched waves."""
+        """Bucket by prompt length, serve each bucket as batched waves.
+
+        Malformed requests (empty prompt, budget past max_len) are
+        rejected as FAILED results at admission — one bad request never
+        raises out of the whole wave (``self.results`` carries the
+        per-request lifecycle state next to the token dict).
+        """
         self.token_walltimes = {}
+        self.results = {}
+        self._step_idx = 0
         self.serve_t0 = time.perf_counter()
+        out: dict[int, np.ndarray] = {}
         buckets: dict[int, list[Request]] = {}
         for r in requests:
+            rec = self._record(r)
+            err = validate_request(r, max_len=self.max_len)
+            if err:
+                rec.fail(err)
+                out[r.rid] = np.array([], np.int32)
+                continue
             buckets.setdefault(len(r.prompt), []).append(r)
-        out: dict[int, np.ndarray] = {}
         for _, rs in sorted(buckets.items()):
             for i in range(0, len(rs), self.batch_size):
-                out.update(self.serve_wave(rs[i:i + self.batch_size]))
+                wave = []
+                for r in rs[i:i + self.batch_size]:
+                    rec = self.results[r.rid]
+                    dl = r.deadline_s
+                    if dl is not None and \
+                            time.perf_counter() - self.serve_t0 > dl:
+                        rec.cancel("deadline expired")
+                        out[r.rid] = np.array([], np.int32)
+                    else:
+                        wave.append(r)
+                if wave:
+                    out.update(self.serve_wave(wave))
         return out
 
     def serve_wave(self, requests: list[Request]) -> dict[int, np.ndarray]:
@@ -111,6 +173,9 @@ class ServingEngine:
         assert len(plens) == 1, "serve_wave needs equal prompt lengths"
         plen = plens.pop()
         n_real = len(requests)
+        recs = [self._record(r) for r in requests]
+        for rec in recs:
+            rec.to(RequestState.PREFILLING)
         reqs = list(requests)
         while len(reqs) < self.batch_size:  # pad with a dummy row
             reqs.append(Request(rid=-1,
@@ -125,26 +190,55 @@ class ServingEngine:
         max_new = max(r.max_new_tokens for r in requests)
         out = {r.rid: [] for r in requests}
         done = np.array([r.max_new_tokens == 0 for r in requests])
+        for i, rec in enumerate(recs):
+            if done[i]:
+                rec.finish()          # zero budget: nothing to generate
+            else:
+                rec.to(RequestState.DECODING)
 
-        token = self._next_token(logits, n_real)
+        token, packed = self._next_token(logits, n_real)
         for step in range(max_new):
+            self.injector.step_begin(self, self._step_idx)
             # One device->host transfer per step, live rows only;
             # per-row int() on the device array would sync the stream
             # once per request.
-            token_host = np.asarray(token[:n_real])
+            raw = np.asarray(packed)
+            token_host = raw[:n_real]
+            ok_host = np.asarray(
+                self.injector.corrupt_step_ok(
+                    self._step_idx, raw[n_real:].astype(bool)))
+            self._step_idx += 1
             now = time.perf_counter()
             for i, r in enumerate(requests):
-                if not done[i]:
-                    t = int(token_host[i, 0])
-                    out[r.rid].append(t)
-                    self.token_walltimes.setdefault(r.rid, []).append(now)
-                    if t == r.eos_id or len(out[r.rid]) >= r.max_new_tokens:
-                        done[i] = True
+                if done[i]:
+                    continue
+                rec = recs[i]
+                if not ok_host[i]:
+                    # per-request failure isolation: the NaN/inf guard
+                    # fails this slot; the rest of the wave decodes on
+                    rec.fail("non-finite logits")
+                    done[i] = True
+                    continue
+                dl = r.deadline_s
+                if dl is not None and now - self.serve_t0 > dl:
+                    rec.cancel("deadline expired")
+                    done[i] = True
+                    continue
+                t = int(token_host[i])
+                out[r.rid].append(t)
+                rec.tokens.append(t)
+                self.token_walltimes.setdefault(r.rid, []).append(now)
+                if t == r.eos_id or len(out[r.rid]) >= r.max_new_tokens:
+                    rec.finish()
+                    done[i] = True
             if done.all():
                 break
             logits, cache = self._decode(self.params, cache, token,
                                          jnp.int32(plen + step))
-            token = self._next_token(logits, n_real)
+            token, packed = self._next_token(logits, n_real)
+        for rec in recs:
+            if rec.state not in TERMINAL_STATES:
+                rec.finish()
         return {rid: np.array(v, np.int32) for rid, v in out.items()}
 
 
@@ -154,7 +248,7 @@ class ContinuousBatchingEngine:
     ``batch_size`` decode slots share page pools of ``num_pages`` pages.
     Admission is reservation-based FIFO (DESIGN.md §4): the head-of-
     queue request takes a free slot as soon as pages for its prompt AND
-    its full decode budget are available. Its prompt is then prefilled
+    its decode reservation are available. Its prompt is then prefilled
     ``chunk_size`` tokens per engine step (DESIGN.md §6) — each chunk
     writes its K/V straight into the allocated pages through
     ``prefill_chunk`` and rides the SAME jitted step as the live decode
@@ -163,12 +257,26 @@ class ContinuousBatchingEngine:
     the last chunk's logits in the step's single host transfer (no
     per-admit argmax sync, no dense batch-1 cache, no copy-on-admit
     scatter). Retiring sequences free their pages between steps.
+
+    ``decode_reserve_frac`` < 1 runs the pool hot: admission reserves
+    only that fraction of a request's decode budget, so ``append`` can
+    hit pool exhaustion mid-decode — the scheduler then preempts the
+    youngest live request (audited release, requeue at the head, chunked
+    re-prefill of prompt+generated; DESIGN.md §7) instead of crashing.
+    ``headroom_pages`` free pages are held back from FRESH admissions so
+    preempted requests can always re-admit (resumed requests bypass the
+    headroom); the default is the analytical
+    ``core/autotune.tune_pool_headroom`` when overcommitted, 0 when
+    fully reserved.
     """
 
     def __init__(self, model: Model, params, *, max_len: int = 512,
                  batch_size: int = 4, page_size: int = 16,
                  num_pages: int | None = None, kv_dtype=None,
-                 chunk_size: int | None = None):
+                 chunk_size: int | None = None,
+                 decode_reserve_frac: float = 1.0,
+                 headroom_pages: int | None = None,
+                 max_preemptions: int = 32):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -199,6 +307,18 @@ class ContinuousBatchingEngine:
         chunk_size = -(-chunk_size // page_size) * page_size
         self.chunk_size = chunk_size
         self.chunk_pages = chunk_size // page_size
+        if not 0.0 < decode_reserve_frac <= 1.0:
+            raise ValueError(
+                f"decode_reserve_frac must be in (0, 1], got "
+                f"{decode_reserve_frac}")
+        self.decode_reserve_frac = float(decode_reserve_frac)
+        if headroom_pages is None:
+            headroom_pages = (
+                tune_pool_headroom(num_slots=batch_size,
+                                   chunk_pages=self.chunk_pages)
+                if self.decode_reserve_frac < 1.0 else 0)
+        self.headroom_pages = headroom_pages
+        self.max_preemptions = max_preemptions
         self.peak_pages_used = 0  # across serve() calls, for benchmarks
         # per-decode-step pool occupancy of the LAST serve() call, so
         # benchmark KV-byte claims are auditable over time
@@ -208,37 +328,78 @@ class ContinuousBatchingEngine:
         self.step_log: list[dict] = []
         self.token_walltimes: dict[int, list[float]] = {}
         self.serve_t0 = 0.0
+        # lifecycle + fault harness (DESIGN.md §7): injector/auditor are
+        # plain attributes so tests/benchmarks swap them between serve()
+        # calls without recompiling the jitted steps
+        self.injector = NO_FAULTS
+        self.auditor = None
+        self.results: dict[int, RequestRecord] = {}
+        self.preemption_count = 0      # last serve() call
+        self.recompute_tokens = 0      # last serve() call
+        self._cancel_req: set[int] = set()
 
-        def decode_step(p, c, t, table, pos):
+        # Host<->device protocol: each step kind takes the host state as
+        # ONE packed int32 array per direction. Inbound, ``hs`` carries
+        # tokens | positions | page table (and ``ch`` the chunk's tokens
+        # | pages | seq table | q0 | len), unpacked by static slicing
+        # inside the jit — one device_put per step instead of 3-7, which
+        # is a large slice of small-model serving wall time. Outbound,
+        # the return packs argmax tokens then the finite-guard flags, so
+        # the step's single device->host sync carries both (a second
+        # sync for the NaN guard would cost as much as the guard saves).
+        B_, MP = batch_size, self.max_pages
+        CS, CP = self.chunk_size, self.chunk_pages
+
+        def unpack_hs(hs):
+            return (hs[:B_][:, None], hs[2 * B_:].reshape(B_, MP),
+                    hs[B_:2 * B_])
+
+        def unpack_ch(ch):
+            return (ch[:CS][None, :], ch[CS:CS + CP],
+                    ch[CS + CP:CS + CP + MP], ch[-2], ch[-1])
+
+        def decode_step(p, c, hs):
+            t, table, pos = unpack_hs(hs)
             logits, c = model.paged_decode_step(p, model.cfg, t, c, table,
                                                 pos)
-            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), c
+            last = logits[:, -1]
+            return jnp.concatenate([
+                jnp.argmax(last, axis=-1).astype(jnp.int32),
+                _finite_rows(last).astype(jnp.int32),
+            ]), c
 
-        def chunk_step(p, c, t, table, pos, ctokens, cpages, seq_table,
-                       q_offset, chunk_len):
+        def chunk_step(p, c, hs, ch):
             # one mixed step: the prompt chunk and ALL decode slots in a
-            # single dispatch; both argmaxes land in one host transfer
+            # single dispatch; both argmaxes (and both finite-guard
+            # flags) land in one host transfer
+            t, table, pos = unpack_hs(hs)
+            ctokens, cpages, seq_table, q_offset, chunk_len = unpack_ch(ch)
             first_logits, c = model.prefill_chunk(
                 p, model.cfg, ctokens, c, seq_table, cpages, q_offset,
                 chunk_len,
             )
             logits, c = model.paged_decode_step(p, model.cfg, t, c, table,
                                                 pos)
-            toks = jnp.concatenate([
-                jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32),
+            last = logits[:, -1]
+            return jnp.concatenate([
+                jnp.argmax(last, axis=-1).astype(jnp.int32),
                 jnp.argmax(first_logits, axis=-1).astype(jnp.int32),
-            ])
-            return toks, c
+                _finite_rows(last).astype(jnp.int32),
+                _finite_rows(first_logits).astype(jnp.int32),
+            ]), c
 
-        def chunk_only(p, c, ctokens, cpages, seq_table, q_offset,
-                       chunk_len):
+        def chunk_only(p, c, ch):
             # no live decode slots: don't pay a dead full-batch decode
             # pass just to move the prefill along
+            ctokens, cpages, seq_table, q_offset, chunk_len = unpack_ch(ch)
             first_logits, c = model.prefill_chunk(
                 p, model.cfg, ctokens, c, seq_table, cpages, q_offset,
                 chunk_len,
             )
-            return jnp.argmax(first_logits, axis=-1).astype(jnp.int32), c
+            return jnp.concatenate([
+                jnp.argmax(first_logits, axis=-1).astype(jnp.int32),
+                _finite_rows(first_logits).astype(jnp.int32),
+            ]), c
 
         self._decode = jax.jit(decode_step)
         self._chunk_step = jax.jit(chunk_step)
@@ -252,81 +413,203 @@ class ContinuousBatchingEngine:
             kv_dtype=self.kv_dtype,
         )
 
+    def cancel(self, rid: int) -> None:
+        """Request cancellation of ``rid``; honored at the next step
+        boundary (queued, mid-prefill, or mid-decode — pages freed)."""
+        self._cancel_req.add(rid)
+
     def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
         B, ps = self.batch_size, self.page_size
         mgr = PagedKVCacheManager(self.num_pages, ps, num_slots=B,
                                   max_pages_per_seq=self.max_pages,
                                   kv_dtype=self.kv_dtype)
+        self._mgr = mgr  # auditable by tests while serve() is live
         cache = self.model.make_cache(B, self.max_len, cache_layout="paged",
                                       page_size=ps, num_pages=self.num_pages,
                                       kv_dtype=self.kv_dtype)
         self.occupancy_log = []
         self.step_log = []
         self.token_walltimes = {}
+        self.results = {}
+        self.preemption_count = 0
+        self.recompute_tokens = 0
+        self._cancel_req = set()
         self.serve_t0 = time.perf_counter()
-        queue = deque(requests)
-        active: dict[int, Request] = {}
-        out: dict[int, list[int]] = {}
+        queue: deque[RequestRecord] = deque()
+        for r in requests:
+            rec = RequestRecord(r)
+            self.results[r.rid] = rec
+            err = validate_request(r, max_len=self.max_len,
+                                   pool_pages=self.num_pages - 1,
+                                   page_size=ps)
+            if err:
+                rec.fail(err)  # one bad request, not a dead wave
+            else:
+                queue.append(rec)
+        active: dict[int, RequestRecord] = {}
         tokens = np.zeros((B, 1), np.int32)
         positions = np.zeros((B,), np.int32)
-        pending: list | None = None  # [request, slot, q_offset] in flight
+        pending: list | None = None  # [rec, slot, q_offset, rprompt]
+        admit_seq = itertools.count()
+        n_append = 0    # global append counter (fault-injection index)
+        step_idx = 0
+
+        def idle(slot: int) -> None:
+            tokens[slot, 0] = 0
+            positions[slot] = 0
+
+        def retire(slot: int) -> None:
+            mgr.release(slot)
+            idle(slot)
+
+        def preempt(slot: int) -> None:
+            """Evict a live decode slot: audited page release, requeue
+            at the HEAD of the wait queue (age preserved — re-admission
+            re-prefills prompt+generated through the chunk path)."""
+            rec = active.pop(slot)
+            retire(slot)
+            rec.to(RequestState.PREEMPTED)
+            rec.preemptions += 1
+            self.preemption_count += 1
+            if rec.preemptions > self.max_preemptions:
+                rec.fail(f"preempted > {self.max_preemptions} times "
+                         f"(pool thrashing)")
+            else:
+                rec.to(RequestState.QUEUED)
+                queue.appendleft(rec)
+
+        def recover_exhaustion(requester: int) -> bool:
+            """Mid-decode pool exhaustion: evict the youngest live
+            request and retry until the append lands or the requester
+            itself was the victim. Returns False when the requester was
+            preempted (its pending token survives on the record)."""
+            while True:
+                victim = max(active, key=lambda s: active[s].admit_seq)
+                preempt(victim)
+                if victim == requester:
+                    return False
+                try:
+                    mgr.append(requester)
+                    return True
+                except PagePoolExhausted:
+                    continue
+
+        has_deadlines = any(r.deadline_s is not None for r in requests)
+
+        def sweep_kills(now: float) -> None:
+            """Cancellation + deadline enforcement at step granularity,
+            for queued, mid-prefill and mid-decode requests alike.
+            Fast path: nothing to kill -> two truthiness checks, no
+            per-step scan of the queue."""
+            nonlocal pending
+            if not self._cancel_req and not has_deadlines:
+                return
+
+            def kill_reason(rec: RequestRecord) -> str | None:
+                if rec.rid in self._cancel_req:
+                    return "cancelled"
+                dl = rec.request.deadline_s
+                if dl is not None and now - self.serve_t0 > dl:
+                    return "deadline expired"
+                return None
+
+            for slot in list(active):
+                reason = kill_reason(active[slot])
+                if reason:
+                    active.pop(slot).cancel(reason)
+                    retire(slot)
+            if pending is not None:
+                reason = kill_reason(pending[0])
+                if reason:
+                    pending[0].cancel(reason)
+                    retire(pending[1])
+                    pending = None
+            for rec in [q for q in queue if kill_reason(q)]:
+                rec.cancel(kill_reason(rec))
+                queue.remove(rec)
 
         def start_prefill():
             """Admit the head-of-queue request into a free slot (FIFO:
-            reservation-based, one prefill stream at a time)."""
+            reservation-based, one prefill stream at a time). Preempted
+            requests sit at the head and re-prefill prompt+generated;
+            fresh admissions leave ``headroom_pages`` free for them."""
             nonlocal pending
             while queue:
-                r = queue[0]
-                if r.max_new_tokens <= 0:  # nothing to generate
+                rec = queue[0]
+                if rec.remaining <= 0:  # nothing (left) to generate
                     queue.popleft()
-                    out[r.rid] = []
+                    rec.finish()
                     continue
-                plen = len(r.prompt)
-                budget = plen + r.max_new_tokens
-                if budget > self.max_len:
-                    raise ValueError(
-                        f"request {r.rid} needs {budget} > max_len "
-                        f"{self.max_len}"
-                    )
-                if mgr.pages_needed(budget) > self.num_pages - 1:
-                    # Even an empty pool can never hold it — waiting
-                    # would silently drop the request (and everything
-                    # FIFO-queued behind it) once the batch drains.
-                    raise ValueError(
-                        f"request {r.rid} needs "
-                        f"{mgr.pages_needed(budget)} pages > pool size "
-                        f"{self.num_pages - 1}"
-                    )
+                rprompt = rec.resume_prompt()
+                plen = len(rprompt)
+                # resumed requests get their FULL remaining budget (no
+                # second self-inflicted exhaustion); fresh ones reserve
+                # the configured fraction and may grow into free pages
+                reserve = rec.remaining if rec.resumed else min(
+                    rec.remaining,
+                    max(1, int(np.ceil(rec.remaining
+                                       * self.decode_reserve_frac))))
+                need = mgr.pages_needed(plen + reserve)
+                headroom = 0 if rec.resumed else max(
+                    0, min(self.headroom_pages,
+                           (self.num_pages - 1) - need))
                 free = [s for s in range(B) if s not in active]
-                if not free or not mgr.can_admit(budget):
-                    return  # FIFO: wait for slot/pages, don't starve r
+                if (not free or not mgr.can_admit(plen + reserve)
+                        or mgr.available - need < headroom):
+                    return  # FIFO: wait for slot/pages, don't starve
+                if self.injector.admit_fault(step_idx, rec.rid):
+                    return  # injected admission rejection: retry later
                 queue.popleft()
-                mgr.admit(free[0], plen, reserve=r.max_new_tokens)
+                slot = free[0]
+                mgr.admit(slot, plen, reserve=reserve)
+                if rec.admit_seq is None:
+                    rec.admit_seq = next(admit_seq)
+                if rec.resumed:
+                    rec.recompute_tokens += plen
+                    self.recompute_tokens += plen
+                rec.to(RequestState.PREFILLING)
                 self.peak_pages_used = max(self.peak_pages_used,
                                            mgr.peak_pages_used)
-                pending = [r, free[0], 0]
+                pending = [rec, slot, 0, rprompt]
                 return
 
+        stalls = 0
         while True:
+            self.injector.step_begin(self, step_idx)
+            sweep_kills(time.perf_counter())
             if pending is None:
                 start_prefill()
             if pending is None and not active:
-                break
+                if not queue:
+                    break
+                # nothing live but requests still queued: admission
+                # backpressure (injected rejection) with an idle engine.
+                # Spin the scheduler without dispatching a dead step —
+                # and refuse to spin forever if the injector never
+                # relents (a fault-script bug, not a serving condition).
+                stalls += 1
+                if stalls > 10_000:
+                    rec = queue.popleft()
+                    rec.fail("admission stalled (injected rejection)")
+                    stalls = 0
+                step_idx += 1
+                continue
+            stalls = 0
             self.occupancy_log.append(mgr.pages_used)
             self.step_log.append({"prefill_in_flight": pending is not None,
                                   "live_decode": len(active)})
             dec_table = mgr.table()
             if pending is not None:
-                r, slot, q0 = pending
+                rec, slot, q0, rprompt = pending
                 # mid-admission the slot must not decode into (or read
                 # from) its half-written pages: point it at scratch
                 # (the prefill keeps the real row, captured first)
                 seq_table = dec_table[slot].copy()
                 dec_table[slot] = SCRATCH_PAGE
-                plen = len(r.prompt)
+                plen = len(rprompt)
                 clen = min(self.chunk_size, plen - q0)
                 ctokens = np.ones((1, self.chunk_size), np.int32)
-                ctokens[0, :clen] = r.prompt[q0:q0 + clen]
+                ctokens[0, :clen] = rprompt[q0:q0 + clen]
                 # the chunk's page span; padded-tail pages past the
                 # allocation land on the scratch page
                 seq_pages = mgr.seq_pages(slot)
@@ -334,59 +617,99 @@ class ContinuousBatchingEngine:
                 cpages = [seq_pages[p] if p < len(seq_pages)
                           else SCRATCH_PAGE
                           for p in range(p0, p0 + self.chunk_pages)]
-                chunk_args = (
-                    jnp.asarray(ctokens), jnp.asarray(cpages, jnp.int32),
-                    jnp.asarray(seq_table),
-                    jnp.int32(q0), jnp.int32(clen),
-                )
+                ch = jnp.asarray(np.concatenate([
+                    ctokens[0], np.asarray(cpages, np.int32), seq_table,
+                    np.asarray([q0, clen], np.int32),
+                ]))
                 if active:
-                    toks, cache = self._chunk_step(
-                        self.params, cache, jnp.asarray(tokens),
-                        jnp.asarray(dec_table), jnp.asarray(positions),
-                        *chunk_args,
-                    )
+                    hs = np.concatenate([tokens[:, 0], positions,
+                                         dec_table.ravel()])
+                    packed, cache = self._chunk_step(
+                        self.params, cache, jnp.asarray(hs), ch)
                 else:
-                    toks, cache = self._chunk_only(
-                        self.params, cache, *chunk_args,
-                    )
+                    packed, cache = self._chunk_only(self.params, cache, ch)
             else:
-                toks, cache = self._decode(
-                    self.params, cache, jnp.asarray(tokens),
-                    jnp.asarray(dec_table), jnp.asarray(positions),
-                )
+                hs = np.concatenate([tokens[:, 0], positions,
+                                     dec_table.ravel()])
+                packed, cache = self._decode(self.params, cache,
+                                             jnp.asarray(hs))
             # the step's single device->host transfer carries decode
-            # tokens AND (on the final chunk) the admitted request's
-            # first token — no per-admit argmax sync
-            token_host = np.asarray(toks)
+            # tokens, (on the final chunk) the admitted request's first
+            # token, AND the finite-guard flags — no per-admit argmax
+            # sync, no second sync for the NaN guard
+            raw = np.asarray(packed)
+            half = raw.shape[0] // 2
+            token_host = raw[:half]
+            ok_host = np.asarray(
+                self.injector.corrupt_step_ok(step_idx,
+                                              raw[half:].astype(bool)))
             now = time.perf_counter()
-            for slot_i, r_i in list(active.items()):
-                t = int(token_host[slot_i])
-                out[r_i.rid].append(t)
-                self.token_walltimes.setdefault(r_i.rid, []).append(now)
-                positions[slot_i] += 1
-                mgr.append(slot_i)
-                if t == r_i.eos_id or len(out[r_i.rid]) >= r_i.max_new_tokens:
-                    mgr.free(slot_i)
+            for slot_i in list(active.keys()):
+                if slot_i not in active:
+                    continue  # preempted by an earlier slot's recovery
+                rec_i = active[slot_i]
+                if not ok_host[slot_i]:
+                    # NaN/inf isolation: fail THIS slot, free its pages,
+                    # let the rest of the batch decode on
+                    rec_i.fail("non-finite logits")
                     del active[slot_i]
-                    tokens[slot_i, 0] = 0
-                    positions[slot_i] = 0
+                    retire(slot_i)
+                    continue
+                t = int(token_host[slot_i])
+                rec_i.tokens.append(t)
+                self.token_walltimes.setdefault(rec_i.rid, []).append(now)
+                positions[slot_i] += 1
+                try:
+                    if self.injector.alloc_fault(step_idx, n_append,
+                                                 slot_i):
+                        raise PagePoolExhausted(
+                            f"injected exhaustion at append {n_append}")
+                    mgr.append(slot_i)
+                except PagePoolExhausted:
+                    if not recover_exhaustion(slot_i):
+                        n_append += 1
+                        continue  # requester itself was preempted
+                finally:
+                    self.peak_pages_used = max(self.peak_pages_used,
+                                               mgr.peak_pages_used)
+                n_append += 1
+                if t == rec_i.request.eos_id or rec_i.remaining <= 0:
+                    rec_i.finish()
+                    del active[slot_i]
+                    retire(slot_i)
                 else:
                     tokens[slot_i, 0] = t
             if pending is not None:
                 q0 += clen
                 if q0 >= plen:  # prefill complete: first token is out
-                    t = int(token_host[-1])
-                    out[r.rid] = [t]
-                    self.token_walltimes[r.rid] = [now]
-                    if t == r.eos_id or r.max_new_tokens <= 1:
-                        mgr.free(slot)  # finished straight out of prefill
+                    if not ok_host[-1]:
+                        rec.fail("non-finite logits")
+                        retire(slot)
                     else:
-                        active[slot] = r
-                        tokens[slot, 0] = t
-                        positions[slot] = plen
+                        t = int(token_host[-1])
+                        rec.tokens.append(t)
+                        self.token_walltimes.setdefault(
+                            rec.rid, []).append(now)
+                        if t == rec.request.eos_id or rec.remaining <= 0:
+                            rec.finish()  # done straight out of prefill
+                            retire(slot)
+                        else:
+                            rec.to(RequestState.DECODING)
+                            active[slot] = rec
+                            tokens[slot, 0] = t
+                            positions[slot] = plen
                     pending = None
                 else:
                     pending[2] = q0
+            if self.auditor is not None:
+                expected = {s: int(positions[s]) for s in active}
+                if pending is not None:
+                    expected[pending[1]] = len(pending[3])
+                self.auditor.check(mgr, expected_lens=expected)
+            step_idx += 1
         self.peak_pages_used = max(self.peak_pages_used,
                                    mgr.peak_pages_used)
-        return {rid: np.array(v, np.int32) for rid, v in out.items()}
+        if self.auditor is not None:
+            self.auditor.final_check(mgr)
+        return {rid: np.array(rec.tokens, np.int32)
+                for rid, rec in self.results.items()}

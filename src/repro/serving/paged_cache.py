@@ -56,8 +56,22 @@ def page_footprint_bytes(*, num_layers: int, num_kv_heads: int,
     return num_layers * per_layer
 
 
-class PagePoolExhausted(RuntimeError):
+class PagedCacheError(RuntimeError):
+    """Base for paged-cache bookkeeping errors (typed, ``-O``-safe)."""
+
+
+class PagePoolExhausted(PagedCacheError):
     """Raised when an alloc/append cannot be served from the free list."""
+
+
+class PageAccountingError(PagedCacheError):
+    """Ownership violation: double-free, freeing an unowned slot, or
+    admitting into an occupied slot — a caller bug that would silently
+    corrupt the free list if trusted."""
+
+
+class PoolConfigError(PagedCacheError):
+    """Raised when the pool is constructed with an unusable shape."""
 
 
 @dataclasses.dataclass
@@ -83,7 +97,11 @@ class PagedKVCacheManager:
     def __init__(self, num_pages: int, page_size: int, *,
                  num_slots: int, max_pages_per_seq: int,
                  kv_dtype="bfloat16"):
-        assert num_pages > 1, "pool needs at least one page beyond scratch"
+        if num_pages <= 1:
+            raise PoolConfigError(
+                f"pool needs at least one page beyond scratch, got "
+                f"num_pages={num_pages}"
+            )
         self.num_pages = num_pages
         self.page_size = page_size
         self.num_slots = num_slots
@@ -92,6 +110,10 @@ class PagedKVCacheManager:
         # LIFO free list, scratch page 0 excluded
         self._free = list(range(num_pages - 1, 0, -1))
         self._seqs: dict[int, PagedSeq] = {}
+        # page id -> owning slot, maintained by alloc-for-slot/release:
+        # the refcount audit that turns a double-free or an unowned free
+        # into a precise error instead of free-list corruption
+        self._owner: dict[int, int] = {}
         self.peak_pages_used = 0
 
     # -- pool accounting --
@@ -111,55 +133,94 @@ class PagedKVCacheManager:
         return n <= min(self.available, self.max_pages_per_seq)
 
     # -- primitive alloc/free --
-    def alloc(self, n: int) -> list[int]:
+    def alloc(self, n: int, *, slot: int | None = None) -> list[int]:
+        """Pop ``n`` pages off the free list; ``slot`` records ownership
+        (the release audit) when the pages join a live sequence."""
         if n > len(self._free):
             raise PagePoolExhausted(
                 f"need {n} pages, {len(self._free)} free"
             )
         ids = [self._free.pop() for _ in range(n)]
+        if slot is not None:
+            for p in ids:
+                self._owner[p] = slot
         self.peak_pages_used = max(self.peak_pages_used, self.pages_used)
         return ids
 
-    def free(self, slot: int) -> None:
+    def release(self, slot: int) -> None:
+        """Return every page owned by ``slot`` to the pool, auditing
+        ownership page by page: a double release (slot already gone) or
+        a page whose recorded owner disagrees raises
+        ``PageAccountingError`` instead of corrupting the free list.
+        This is the path preemption uses to evict a live sequence.
+        """
+        if slot not in self._seqs:
+            raise PageAccountingError(
+                f"release of slot {slot} with no live sequence "
+                f"(double free or never admitted)"
+            )
         seq = self._seqs.pop(slot)
+        for p in seq.pages:
+            owner = self._owner.pop(p, None)
+            if owner != slot:
+                raise PageAccountingError(
+                    f"page {p} freed by slot {slot} but owned by "
+                    f"{owner!r}"
+                )
         self._free.extend(reversed(seq.pages))
+
+    def free(self, slot: int) -> None:
+        """Alias of ``release`` (the audited path is the only path)."""
+        self.release(slot)
 
     # -- sequence lifecycle --
     def admit(self, slot: int, prompt_len: int, *,
               reserve: int = 0) -> list[int]:
         """Allocate pages for ``prompt_len`` + ``reserve`` future tokens.
 
-        Returns the allocated page ids (prompt pages first). The
-        reservation is the admission policy: a request is only admitted
-        once its whole decode budget fits, so a running sequence can
-        never hit pool exhaustion mid-flight (no preemption needed).
+        Returns the allocated page ids (prompt pages first). A full
+        ``max_new_tokens`` reservation is the no-preemption admission
+        policy; the engine may reserve less and run the pool hot, in
+        which case ``append`` can raise ``PagePoolExhausted`` mid-decode
+        and the scheduler preempts (DESIGN.md §7).
         """
-        assert slot not in self._seqs, f"slot {slot} still occupied"
+        if slot in self._seqs:
+            raise PageAccountingError(f"slot {slot} still occupied")
         n = self.pages_needed(prompt_len + reserve)
         if n > self.max_pages_per_seq:
             raise ValueError(
                 f"request needs {n} pages > max_pages_per_seq "
                 f"{self.max_pages_per_seq}"
             )
-        ids = self.alloc(n)
+        ids = self.alloc(n, slot=slot)
         self._seqs[slot] = PagedSeq(pages=ids, length=prompt_len)
         return ids
 
     def append(self, slot: int) -> None:
         """Record one generated token; grow the table past the
-        reservation if the new position crosses into an unowned page."""
+        reservation if the new position crosses into an unowned page.
+        Exception-safe: on ``PagePoolExhausted`` the sequence is
+        unchanged, so the scheduler can preempt a victim and retry."""
         seq = self._seqs[slot]
-        seq.length += 1
-        if seq.length > seq.capacity * self.page_size:
+        if seq.length + 1 > seq.capacity * self.page_size:
             if seq.capacity + 1 > self.max_pages_per_seq:
                 raise PagePoolExhausted(
                     f"slot {slot} exceeded max_pages_per_seq"
                 )
-            seq.pages.extend(self.alloc(1))
+            seq.pages.extend(self.alloc(1, slot=slot))
+        seq.length += 1
 
     def seq_pages(self, slot: int) -> list[int]:
         """Physical page ids owned by ``slot`` (prompt-order)."""
         return list(self._seqs[slot].pages)
+
+    def owned_pages(self) -> dict[int, list[int]]:
+        """slot -> page ids of every live sequence (auditor view)."""
+        return {slot: list(seq.pages) for slot, seq in self._seqs.items()}
+
+    def free_pages(self) -> list[int]:
+        """Current free list (auditor view; LIFO order preserved)."""
+        return list(self._free)
 
     # -- device-facing views --
     def table(self) -> np.ndarray:

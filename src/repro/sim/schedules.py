@@ -690,9 +690,22 @@ def build_chunked_prefill(w, t, hw) -> list[Task] | None:
                     l1_bytes=(m * k + k * n + m * n) * hh * bpe)
 
     n_chunks = -(-w.prompt // chunk)
+    # Preemption churn (DESIGN.md §7): a preempted request replays its
+    # admission chunk by chunk, so an expected preempt_rate recomputes
+    # per prompt charge ceil(rate * n_chunks) extra chunk steps — same
+    # prior-context re-read, page re-write and interleaved decode as the
+    # first pass. The replay samples the TAIL chunks (deepest context):
+    # a tail fraction f of the causal triangle covers f*(2-f) >= f of
+    # its area, so the scheduled charge stays an upper bound on the
+    # workload's rate-scaled useful-MAC floor for any chunk size.
+    rate = getattr(w, "preempt_rate", 0.0)
+    n_recompute = math.ceil(rate * n_chunks) if rate > 0 else 0
     prev_step: tuple[int, ...] = ()
-    for ci in range(n_chunks):
-        q0 = ci * chunk
+    for ci in range(n_chunks + n_recompute):
+        if ci < n_chunks:
+            q0 = ci * chunk
+        else:
+            q0 = (n_chunks - 1 - (ci - n_chunks) % n_chunks) * chunk
         kv_len = min(q0 + chunk, w.prompt)
         n_needed = -(-kv_len // page)
         n_full = min((q0 + 1) // page, n_needed)

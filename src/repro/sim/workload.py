@@ -136,6 +136,13 @@ class ChunkedPrefillWorkload:
     # KV-cache element width. None -> device native; 1 -> int8 pages
     # with one fp32 scale per page (K and V each) riding the page DMA.
     kv_bpe: int | None = None
+    # Preemption churn (DESIGN.md §7): expected recompute passes per
+    # admitted prompt when the pool runs hot (decode_reserve_frac < 1).
+    # Each preemption replays the whole admission — the schedule charges
+    # ceil(rate * n_chunks) extra chunk steps (prior-context re-read,
+    # page re-write, interleaved decode) so the search prices the cost
+    # of a pool sized below full reservation.
+    preempt_rate: float = 0.0
 
     @property
     def seq(self) -> int:
@@ -150,16 +157,20 @@ class ChunkedPrefillWorkload:
     @property
     def mac_ops(self) -> int:
         """Useful MACs: prefill QK^T + PV over the causal triangle plus
-        the interleaved decode steps over live cache entries."""
+        the interleaved decode steps over live cache entries; recompute
+        churn replays the prefill triangle ``preempt_rate`` more times
+        (a lower bound — the scheduled replay is chunk-granular)."""
         prefill = 2 * self.heads * self.group * self._score_elems * self.emb
+        prefill += int(self.preempt_rate * prefill)
         decode = 2 * self.heads * self.group * sum(self.decode_kv_lens) \
             * self.emb
         return prefill + decode
 
     @property
     def softmax_elems(self) -> int:
+        tri = self._score_elems
         return self.heads * self.group * (
-            self._score_elems + sum(self.decode_kv_lens)
+            tri + int(self.preempt_rate * tri) + sum(self.decode_kv_lens)
         )
 
 
