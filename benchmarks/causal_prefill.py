@@ -10,7 +10,9 @@ cost model and the simulator can be cross-checked.
 
 Writes ``BENCH_causal.json`` at the repo root: per shape, dense/pruned
 simulated cycles, MXU (MAC-stream) utilization, MAC op counts, DRAM
-reads, and the tuner's estimated seconds for both regimes.
+reads, and the tuner's estimated seconds for both regimes. With a
+``trace_dir``, each pruned schedule's resolved timeline is also written
+as a Chrome trace on VEC/MXU/DMA tracks (DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -20,6 +22,7 @@ import json
 from pathlib import Path
 
 from repro.core.autotune import tune_attention
+from repro.obs import tasks_to_chrome
 from repro.sim import EDGE_HW, simulate
 from repro.sim.schedules import Tiling, build_schedule
 from repro.sim.workload import AttentionWorkload
@@ -38,10 +41,15 @@ SHAPES = [
 ]
 
 
-def _measure(w: AttentionWorkload, t: Tiling) -> dict:
+def _measure(w: AttentionWorkload, t: Tiling, trace_path=None) -> dict:
     tasks = build_schedule("mas", w, t, EDGE_HW)
     assert tasks is not None, (w.name, t)
-    r = simulate(tasks, EDGE_HW)
+    r = simulate(tasks, EDGE_HW, return_timeline=trace_path is not None)
+    if trace_path is not None:
+        trace = tasks_to_chrome(r.timeline, EDGE_HW.freq_ghz, name=w.name)
+        with open(trace_path, "w") as f:
+            json.dump(trace, f, indent=1)
+            f.write("\n")
     return {
         "cycles": r.cycles,
         "mxu_utilization": r.utilization.get("MAC", 0.0),
@@ -68,11 +76,17 @@ def _tuner_view(w: AttentionWorkload, causal: bool) -> dict:
     }
 
 
-def run() -> dict:
+def run(trace_dir=None) -> dict:
     report = {}
     for w, t in SHAPES:
+        trace_path = None
+        if trace_dir is not None:
+            d = Path(trace_dir)
+            d.mkdir(parents=True, exist_ok=True)
+            trace_path = d / f"causal_{w.name}.json"
         dense = _measure(w, t)
-        pruned = _measure(dataclasses.replace(w, causal=True), t)
+        pruned = _measure(dataclasses.replace(w, causal=True), t,
+                          trace_path=trace_path)
         report[w.name] = {
             "heads": w.heads,
             "seq": w.seq,
@@ -90,8 +104,8 @@ def run() -> dict:
     return report
 
 
-def main(emit) -> dict:
-    report = run()
+def main(emit, trace_dir=None) -> dict:
+    report = run(trace_dir=trace_dir)
     OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
     for name, row in report.items():
         cyc = row["pruned"]["cycles"]

@@ -1,0 +1,57 @@
+"""Shared measurement helpers for the serving benchmarks.
+
+Every serving benchmark times an engine the same way: one warm-up pass
+(so jit compilation never lands in the measurement), then best-of-N
+timed passes to damp host scheduling jitter — the CI bench-regression
+guard compares serving-path changes, not noise. ``timed_serve`` is that
+loop; ``latency_stats`` folds the engine's per-token wall-clock
+timestamps into the p50/p95 TTFT / inter-token numbers the reports
+quote (DESIGN.md §7-8).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.serving import Request
+
+
+def latency_stats(engine, requests) -> dict:
+    """p50/p95 TTFT and inter-token latency from the engine's per-token
+    wall-clock timestamps (last serve() pass)."""
+    ttfts, itls = [], []
+    for r in requests:
+        ts = engine.token_walltimes.get(r.rid)
+        if not ts:
+            continue
+        ttfts.append(ts[0] - engine.serve_t0)
+        itls.extend(np.diff(ts))
+
+    def pct(xs, q):
+        return float(np.percentile(xs, q)) if xs else 0.0
+
+    return {
+        "ttft_s": {"p50": pct(ttfts, 50), "p95": pct(ttfts, 95)},
+        "itl_s": {"p50": pct(itls, 50), "p95": pct(itls, 95)},
+    }
+
+
+def timed_serve(engine, requests, *, repeats: int = 3,
+                warmup: bool = True) -> tuple[dict, float, dict]:
+    """Warm-up + best-of-``repeats`` timed serve() passes.
+
+    Returns ``(outputs, best_seconds, latency_stats_of_best_pass)``.
+    Each pass gets fresh Request copies — engines may consume them.
+    """
+    if warmup:
+        engine.serve([Request(**r.__dict__) for r in requests])
+    out = best = lat = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = engine.serve([Request(**r.__dict__) for r in requests])
+        sec = time.perf_counter() - t0
+        if best is None or sec < best:
+            best, lat = sec, latency_stats(engine, requests)
+    return out, best, lat

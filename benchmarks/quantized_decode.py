@@ -37,9 +37,11 @@ from repro.sim import EDGE_HW, PagedDecodeWorkload, simulate
 from repro.sim.schedules import build_schedule, tiling_space
 
 try:  # package mode (benchmarks/run.py) vs script mode (ci.sh)
-    from benchmarks.serving_throughput import _timed, make_requests
+    from benchmarks.common import timed_serve
+    from benchmarks.serving_throughput import make_requests
 except ImportError:
-    from serving_throughput import _timed, make_requests
+    from common import timed_serve
+    from serving_throughput import make_requests
 
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_quant.json"
 
@@ -72,9 +74,9 @@ def measured_section(arch_id: str, n_requests: int) -> dict:
                                         kv_dtype=kv_dtype)
 
     base = engine(None)
-    out_b, sec_b, _ = _timed(base, requests)
+    out_b, sec_b, _ = timed_serve(base, requests)
     quant = engine("int8")
-    out_q, sec_q, _ = _timed(quant, requests)
+    out_q, sec_q, _ = timed_serve(quant, requests)
     tokens = sum(len(v) for v in out_b.values())
 
     def side(eng, sec):

@@ -2,14 +2,20 @@
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call is simulated time
 for the edge-device tables, host wall-time for the kernel micro-bench).
+``--trace DIR`` forwards a trace directory to every benchmark whose
+``main`` accepts one (DESIGN.md §8): the serving bench writes the
+measured trace + metrics + sim-vs-measured compare report there, the
+sim benches write their schedule timelines as Chrome traces.
 """
 
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 
 
-def main() -> None:
+def main(trace_dir: str | None = None) -> None:
     lines: list[str] = []
 
     def emit(name: str, us: float, derived: str = ""):
@@ -17,27 +23,38 @@ def main() -> None:
         lines.append(line)
         print(line, flush=True)
 
+    def run_bench(mod) -> None:
+        kwargs = {}
+        if (trace_dir is not None
+                and "trace_dir" in inspect.signature(mod.main).parameters):
+            kwargs["trace_dir"] = trace_dir
+        mod.main(emit, **kwargs)
+
     print("name,us_per_call,derived")
     from benchmarks import table2_cycles
-    table2_cycles.main(emit)
+    run_bench(table2_cycles)
     from benchmarks import table3_energy
-    table3_energy.main(emit)
+    run_bench(table3_energy)
     from benchmarks import dram_access
-    dram_access.main(emit)
+    run_bench(dram_access)
     from benchmarks import fig7_search
-    fig7_search.main(emit)
+    run_bench(fig7_search)
     from benchmarks import causal_prefill
-    causal_prefill.main(emit)
+    run_bench(causal_prefill)
     from benchmarks import seq_limit
-    seq_limit.main(emit)
+    run_bench(seq_limit)
     from benchmarks import serving_throughput
-    serving_throughput.main(emit)
+    run_bench(serving_throughput)
     from benchmarks import quantized_decode
-    quantized_decode.main(emit)
+    run_bench(quantized_decode)
     from benchmarks import kernel_bench
-    kernel_bench.main(emit)
+    run_bench(kernel_bench)
     print(f"# {len(lines)} benchmark rows", file=sys.stderr)
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="directory for Chrome traces / metrics / compare "
+                         "reports from trace-aware benchmarks")
+    main(trace_dir=ap.parse_args().trace)

@@ -27,12 +27,20 @@ the page-size tiling search (§4.2 extended to decode) plus the
 chunked-prefill admission search (§6: chunk size as a fifth factor) for
 workloads shaped like the measured request set. ``--smoke`` shrinks the
 request set for the CI invocation.
+
+``--trace DIR`` runs one EXTRA traced pass after the timed ones (so
+tracing never pollutes the regression-guarded numbers) and writes the
+DESIGN.md §8 artifact set into DIR: ``serving_trace.json`` (measured
+Chrome trace — request lifecycle + step spans), ``sim_trace.json``
+(the simulated chunked-admission schedule on VEC/MXU/DMA tracks),
+``compare.json`` (per-phase sim-vs-measured ratios) and
+``metrics.json`` / ``metrics.prom`` (the engine's metrics registry).
 """
 
 from __future__ import annotations
 
+import argparse
 import json
-import sys
 import time
 from pathlib import Path
 
@@ -42,6 +50,7 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.models import build_model
+from repro.obs import Tracer, compare_report, tasks_to_chrome, write_report
 from repro.serving import (
     NO_FAULTS,
     ContinuousBatchingEngine,
@@ -55,8 +64,17 @@ from repro.sim import (
     EDGE_HW,
     ChunkedPrefillWorkload,
     PagedDecodeWorkload,
+    Tiling,
+    build_schedule,
     search_tiling,
+    simulate,
 )
+from repro.sim.workload import serving_phase_workloads
+
+try:  # package mode (benchmarks/run.py) vs script mode (ci.sh)
+    from benchmarks.common import latency_stats, timed_serve
+except ImportError:
+    from common import latency_stats, timed_serve
 
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
 
@@ -91,39 +109,103 @@ def make_requests(cfg, n: int, seed: int = 0, *, max_new: int = MAX_NEW,
     ]
 
 
-def _latency_stats(engine, requests) -> dict:
-    """p50/p95 TTFT and inter-token latency from the engine's per-token
-    wall-clock timestamps (last serve() pass)."""
-    ttfts, itls = [], []
-    for r in requests:
-        ts = engine.token_walltimes.get(r.rid)
-        if not ts:
-            continue
-        ttfts.append(ts[0] - engine.serve_t0)
-        itls.extend(np.diff(ts))
-    def pct(xs, q):
-        return float(np.percentile(xs, q)) if xs else 0.0
+# legacy aliases — the timing loop lives in benchmarks/common.py now
+_latency_stats = latency_stats
+_timed = timed_serve
+
+
+def trace_section(model, params, cfg, requests, report: dict,
+                  trace_dir) -> dict:
+    """One traced serving pass + matching sim run -> §8 artifact set.
+
+    Runs AFTER the timed passes on a fresh engine (warm-up untraced), so
+    neither jit compilation nor tracing overhead lands in the
+    regression-guarded numbers or the trace itself.
+    """
+    trace_dir = Path(trace_dir)
+    trace_dir.mkdir(parents=True, exist_ok=True)
+
+    tracer = Tracer()
+    paged = ContinuousBatchingEngine(model, params, max_len=MAX_LEN,
+                                     batch_size=BATCH, page_size=PAGE,
+                                     chunk_size=CHUNK)
+    paged.serve([Request(**r.__dict__) for r in requests])  # warm-up
+    paged.tracer = tracer
+    paged.serve([Request(**r.__dict__) for r in requests])
+    tracer.write(trace_dir / "serving_trace.json")
+
+    # headline ratios ride the registry too, so check_bench_regression
+    # --metrics can cross-check the metrics pipeline against the report
+    m = paged.metrics
+    for key in ("throughput_ratio", "ttft_ratio", "preemption_ratio"):
+        m.gauge(f"bench.{key}").set(report[key])
+    m.write_json(trace_dir / "metrics.json")
+    m.write_prometheus(trace_dir / "metrics.prom")
+
+    # sim side: price the ENGINE'S OWN configuration (page/chunk), not
+    # the searched optimum — the compare asks how far measured is from
+    # the model of the same schedule. hh is not an engine-visible knob,
+    # so take the best feasible head tile; if the engine point is
+    # infeasible in the sim, fall back to the grid-searched tiling.
+    phases = serving_phase_workloads(
+        cfg.name, [len(r.prompt) for r in requests], MAX_NEW,
+        heads=cfg.num_kv_heads, emb=cfg.hd,
+        group=cfg.num_heads // cfg.num_kv_heads, batch=BATCH)
+
+    def engine_point(kind, w, chunk=None):
+        best = None
+        heads_core = -(-w.heads // EDGE_HW.cores)
+        for hh in range(1, heads_core + 1):
+            t = Tiling(hh=hh, nkv=PAGE, chunk=chunk)
+            tasks = build_schedule(kind, w, t, EDGE_HW)
+            if tasks is None:
+                continue
+            r = simulate(tasks, EDGE_HW, return_timeline=True)
+            if best is None or r.cycles < best[1].cycles:
+                best = (t, r)
+        if best is None:
+            s = search_tiling(kind, w, EDGE_HW, strategy="grid")
+            tasks = build_schedule(kind, w, s.tiling, EDGE_HW)
+            best = (s.tiling, simulate(tasks, EDGE_HW, return_timeline=True))
+        return best
+
+    t_d, r_d = engine_point("paged_decode", phases["decode"])
+    t_p, r_p = engine_point("chunked_prefill", phases["prefill_chunk"],
+                            chunk=CHUNK)
+    n_chunks = phases["prefill_chunk"].n_chunks(t_p.chunk)
+
+    sim_trace = tasks_to_chrome(
+        r_p.timeline, EDGE_HW.freq_ghz,
+        name=(f"{cfg.name} chunked admission "
+              f"(page={t_p.nkv}, chunk={t_p.chunk}, hh={t_p.hh})"))
+    with open(trace_dir / "sim_trace.json", "w") as f:
+        json.dump(sim_trace, f, indent=1)
+        f.write("\n")
+
+    cmp = compare_report(
+        tracer.export(),
+        {"decode": r_d.cycles,
+         # the sim prices the WHOLE admission; per engine step = /chunks
+         "prefill_chunk": r_p.cycles / n_chunks},
+        EDGE_HW.freq_ghz,
+        meta={"arch": cfg.name, "page_size": PAGE, "chunk_size": CHUNK,
+              "batch_size": BATCH, "n_requests": len(requests),
+              "decode_tiling": {"hh": t_d.hh, "page": t_d.nkv},
+              "prefill_tiling": {"hh": t_p.hh, "page": t_p.nkv,
+                                 "chunk": t_p.chunk,
+                                 "n_chunks": n_chunks}})
+    write_report(cmp, trace_dir / "compare.json")
     return {
-        "ttft_s": {"p50": pct(ttfts, 50), "p95": pct(ttfts, 95)},
-        "itl_s": {"p50": pct(itls, 50), "p95": pct(itls, 95)},
+        "dir": str(trace_dir),
+        "events": len(tracer.export()["traceEvents"]),
+        "matched_phases": cmp["matched_phases"],
+        "measured_over_sim_p50": {
+            ph: cmp["phases"][ph]["measured_over_sim_p50"]
+            for ph in cmp["matched_phases"]},
     }
 
 
-def _timed(engine, requests) -> tuple[dict, float, dict]:
-    engine.serve([Request(**r.__dict__) for r in requests])  # warm-up
-    # best-of-3 timed passes: damps host scheduling jitter so the CI
-    # bench-regression guard compares serving-path changes, not noise
-    best = lat = None
-    for _ in range(3):
-        t0 = time.perf_counter()
-        out = engine.serve([Request(**r.__dict__) for r in requests])
-        sec = time.perf_counter() - t0
-        if best is None or sec < best:
-            best, lat = sec, _latency_stats(engine, requests)
-    return out, best, lat
-
-
-def run(n_requests: int) -> dict:
+def run(n_requests: int, trace_dir=None) -> dict:
     cfg = get_smoke(ARCH)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -193,7 +275,7 @@ def run(n_requests: int) -> dict:
 
     ttft_ratio = (lat_d["ttft_s"]["p50"] / lat_c["ttft_s"]["p50"]
                   if lat_c["ttft_s"]["p50"] else 0.0)
-    return {
+    report = {
         "arch": cfg.name,
         "n_requests": len(requests),
         "prompt_lens": [len(r.prompt) for r in requests],
@@ -261,10 +343,14 @@ def run(n_requests: int) -> dict:
             "evals": best_c.evals,
         },
     }
+    if trace_dir is not None:
+        report["trace"] = trace_section(model, params, cfg, requests,
+                                        report, trace_dir)
+    return report
 
 
-def main(emit, n_requests: int = 12) -> dict:
-    report = run(n_requests)
+def main(emit, n_requests: int = 12, trace_dir=None) -> dict:
+    report = run(n_requests, trace_dir=trace_dir)
     OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
     emit(
         "serving_throughput/paged_continuous",
@@ -282,9 +368,15 @@ def main(emit, n_requests: int = 12) -> dict:
 
 
 if __name__ == "__main__":
-    n = 6 if "--smoke" in sys.argv else 12
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small request set for CI")
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="write serving/sim traces + compare report here")
+    cli = ap.parse_args()
+    n = 6 if cli.smoke else 12
     r = main(lambda name, us, derived="": print(f"{name},{us:.3f},{derived}"),
-             n_requests=n)
+             n_requests=n, trace_dir=cli.trace)
     d, c = r["dense_wave"], r["paged_continuous"]
     print(f"dense-wave:       {d['tokens_per_s']:8.1f} tok/s  "
           f"p50 TTFT {d['ttft_s']['p50'] * 1e3:7.1f} ms  "
@@ -302,3 +394,9 @@ if __name__ == "__main__":
           f"{p['failed_requests']} failed, "
           f"{p['pages_leaked']} pages leaked "
           f"({p['auditor_steps']} steps audited)")
+    if "trace" in r:
+        t = r["trace"]
+        ratios = " ".join(f"{ph}={v:.1f}x"
+                          for ph, v in t["measured_over_sim_p50"].items())
+        print(f"trace: {t['events']} events -> {t['dir']}  "
+              f"measured/sim p50: {ratios}")

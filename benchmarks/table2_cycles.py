@@ -1,23 +1,43 @@
 """Table 2 reproduction: execution cycles + speedups, 6 methods x 12
-networks, each method's tiling found by the offline search (§4.2)."""
+networks, each method's tiling found by the offline search (§4.2).
+
+With a ``trace_dir``, each network's winning MAS schedule is re-run
+with its timeline attached and written as a Chrome trace on
+VEC/MXU/DMA tracks (DESIGN.md §8) — the paper's Fig. 4-style stream
+overlap, viewable in Perfetto.
+"""
 
 from __future__ import annotations
 
+import json
 import math
+from pathlib import Path
 
-from repro.sim import EDGE_HW, PAPER_NETWORKS, search_tiling
+from repro.obs import tasks_to_chrome
+from repro.sim import EDGE_HW, PAPER_NETWORKS, build_schedule, \
+    search_tiling, simulate
 from repro.sim.workload import PAPER_TABLE2_CYCLES, PAPER_TABLE2_ORDER
 
 PAPER_GEOMEANS = {"layerwise": 5.09, "softpipe": 2.78, "flat": 1.70,
                   "tileflow": 1.31, "fusemax": 1.27}
 
 
-def run(strategy: str = "grid"):
+def run(strategy: str = "grid", trace_dir=None):
     rows = []
     speedups: dict[str, list[float]] = {}
     for name, w in PAPER_NETWORKS.items():
         res = {m: search_tiling(m, w, EDGE_HW, strategy)
                for m in PAPER_TABLE2_ORDER}
+        if trace_dir is not None:
+            d = Path(trace_dir)
+            d.mkdir(parents=True, exist_ok=True)
+            tasks = build_schedule("mas", w, res["mas"].tiling, EDGE_HW)
+            r = simulate(tasks, EDGE_HW, return_timeline=True)
+            trace = tasks_to_chrome(r.timeline, EDGE_HW.freq_ghz,
+                                    name=f"{name} mas")
+            with open(d / f"table2_{name}_mas.json", "w") as f:
+                json.dump(trace, f, indent=1)
+                f.write("\n")
         cyc = {m: r.result.cycles for m, r in res.items()}
         paper = dict(zip(PAPER_TABLE2_ORDER, PAPER_TABLE2_CYCLES[name]))
         row = {"network": name}
@@ -37,8 +57,8 @@ def run(strategy: str = "grid"):
     return rows, geo
 
 
-def main(emit):
-    rows, geo = run()
+def main(emit, trace_dir=None):
+    rows, geo = run(trace_dir=trace_dir)
     for r in rows:
         us = r["mas_Mcyc"] * 1e6 / EDGE_HW.freq_ghz / 1e3  # cycles -> us
         emit(f"table2/{r['network']}", us,

@@ -24,6 +24,15 @@ injected mid-run exhaustion burst (preempted tok/s / uncontended tok/s,
 same process: machine-normalized like the others) — is guarded the same
 way so recompute-preemption overhead can't silently grow
 (DESIGN.md §7). Baselines missing the key (pre-lifecycle) skip it.
+
+``--metrics METRICS.json`` additionally ingests the metrics-registry
+dump the traced serving pass writes (DESIGN.md §8) and
+consistency-checks it against CURRENT.json: the ``bench.*_ratio``
+gauges must echo the report's ratios (the registry serialized
+faithfully), ``serving.tokens_generated`` must match the report's
+token count (the traced pass served the same workload), and the
+per-kind step histograms must be present and populated. Catches a
+metrics pipeline that silently drifts from the numbers CI guards.
 """
 
 from __future__ import annotations
@@ -32,6 +41,44 @@ import argparse
 import json
 import sys
 from pathlib import Path
+
+
+def check_metrics(metrics: dict, cur: dict) -> list[str]:
+    """Consistency-check a metrics-registry JSON dump against the
+    benchmark report it rode along with. Returns problems (empty = ok)."""
+    problems: list[str] = []
+    for section in ("counters", "gauges", "histograms", "series"):
+        if section not in metrics:
+            problems.append(f"metrics missing section {section!r}")
+    if problems:
+        return problems
+
+    gauges = metrics["gauges"]
+    for key in ("throughput_ratio", "ttft_ratio", "preemption_ratio"):
+        want = cur.get(key)
+        got = gauges.get(f"bench.{key}", {}).get("value")
+        if want is None or got is None:
+            problems.append(f"bench.{key} gauge or report key missing")
+        elif abs(got - want) > 1e-9 * max(1.0, abs(want)):
+            problems.append(
+                f"bench.{key} gauge {got} != report {key} {want}")
+
+    tokens = metrics["counters"].get("serving.tokens_generated")
+    want_tok = cur.get("generated_tokens")
+    if tokens is None or want_tok is None or int(tokens) != int(want_tok):
+        problems.append(
+            f"serving.tokens_generated {tokens} != report "
+            f"generated_tokens {want_tok} — traced pass served "
+            f"a different workload")
+
+    hists = metrics["histograms"]
+    step_keys = [k for k in hists if k.startswith("engine.step_s.")]
+    if not step_keys:
+        problems.append("no engine.step_s.* histograms in metrics")
+    for k in step_keys:
+        if hists[k].get("count", 0) <= 0:
+            problems.append(f"histogram {k} is empty")
+    return problems
 
 
 def main() -> int:
@@ -46,6 +93,9 @@ def main() -> int:
     ap.add_argument("--preempt-threshold", type=float, default=0.25,
                     help="max fractional drop allowed in throughput "
                          "retained under the injected preemption burst")
+    ap.add_argument("--metrics", type=Path, default=None,
+                    help="metrics-registry JSON from the traced serving "
+                         "pass; consistency-checked against CURRENT.json")
     args = ap.parse_args()
 
     # An empty/unreadable baseline (e.g. `git show` truncated the temp
@@ -121,6 +171,16 @@ def main() -> int:
     else:
         print("bench-guard: no preemption_ratio in one of the files; "
               "skipping preemption guard")
+
+    if args.metrics is not None:
+        metrics = json.loads(args.metrics.read_text())
+        problems = check_metrics(metrics, cur)
+        if problems:
+            for p in problems:
+                print(f"bench-guard: metrics: {p}", file=sys.stderr)
+            return 1
+        print(f"bench-guard: metrics registry at {args.metrics} "
+              "consistent with report")
     print("bench-guard: ok")
     return 0
 

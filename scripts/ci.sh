@@ -21,17 +21,56 @@ python -m pytest -x -q --ignore=tests/test_paged_cache.py \
 # Serving smoke: dense-wave vs chunked-paged-continuous on a mixed
 # LONG/SHORT request set (asserts output equivalence, writes
 # BENCH_serving.json with p50/p95 TTFT + inter-token latency next to
-# tokens/s). The committed baseline is captured first so the regression
-# guard can compare the fresh run against it on BOTH normalized ratios
-# (tokens/s and p50 TTFT).
+# tokens/s). --trace adds one extra traced pass AFTER the timed ones
+# (DESIGN.md §8): measured serving Chrome trace, simulated VEC/MXU/DMA
+# schedule trace, sim-vs-measured compare report, metrics registry.
+# The committed baseline is captured first so the regression guard can
+# compare the fresh run against it on BOTH normalized ratios (tokens/s
+# and p50 TTFT); --metrics cross-checks the registry dump against the
+# report the guard just validated.
 BENCH_BASELINE="$(mktemp)"
+TRACE_DIR="$(mktemp -d)"
 git show HEAD:BENCH_serving.json > "$BENCH_BASELINE" 2>/dev/null \
   || cp BENCH_serving.json "$BENCH_BASELINE" 2>/dev/null || true
-python benchmarks/serving_throughput.py --smoke
+python benchmarks/serving_throughput.py --smoke --trace "$TRACE_DIR"
+python scripts/validate_trace.py "$TRACE_DIR/serving_trace.json" \
+  "$TRACE_DIR/sim_trace.json"
 python scripts/check_bench_regression.py "$BENCH_BASELINE" \
   BENCH_serving.json --threshold 0.10 --ttft-threshold 0.35 \
-  --preempt-threshold 0.25
+  --preempt-threshold 0.25 --metrics "$TRACE_DIR/metrics.json"
+
+# Observability hard gates (DESIGN.md §8): the measured trace must
+# carry one lifecycle span per request and per-step spans for every
+# compile-shape kind, and the compare report must join BOTH phases with
+# finite ratios (the host-vs-edge-NPU magnitude is not asserted — the
+# calibration pass owns interpreting it).
+python - "$TRACE_DIR" <<'PY'
+import json
+import sys
+
+d = sys.argv[1]
+trace = json.load(open(f"{d}/serving_trace.json"))
+bench = json.load(open("BENCH_serving.json"))
+evs = trace["traceEvents"]
+req_spans = [e for e in evs if e.get("ph") == "B"
+             and e.get("name") == "request"]
+assert len(req_spans) == bench["n_requests"], (
+    f"{len(req_spans)} request spans != {bench['n_requests']} requests")
+kinds = {(e.get("args") or {}).get("kind") for e in evs
+         if e.get("ph") == "X" and e.get("name") == "step"}
+assert {"decode", "chunk", "chunk+decode"} <= kinds, f"step kinds: {kinds}"
+cmp = json.load(open(f"{d}/compare.json"))
+assert sorted(cmp["matched_phases"]) == ["decode", "prefill_chunk"], cmp
+for ph in cmp["matched_phases"]:
+    r = cmp["phases"][ph]["measured_over_sim_p50"]
+    assert r and r > 0, (ph, r)
+print(f"observability gates OK: {len(req_spans)} request spans, "
+      f"step kinds {sorted(kinds)}, compare ratios " + ", ".join(
+          f"{ph}={cmp['phases'][ph]['measured_over_sim_p50']:.1f}x"
+          for ph in cmp["matched_phases"]))
+PY
 rm -f "$BENCH_BASELINE"
+rm -rf "$TRACE_DIR"
 
 # Lifecycle hard gates (DESIGN.md §7): the benchmark's injected mid-run
 # exhaustion burst must complete every request through recompute

@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""Validate Chrome trace-event JSON files (DESIGN.md §8).
+
+Thin CLI over ``repro.obs.trace.validate_chrome_trace``: for each path,
+loads the JSON and checks the structural invariants the exporter
+guarantees (required keys per phase, time-sorted events, matched B/E
+spans, truncation flagged honestly). Exits non-zero if any file is
+missing, unparsable, or invalid — CI runs it over every trace the
+benchmarks emit.
+
+Usage: PYTHONPATH=src python scripts/validate_trace.py TRACE.json ...
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.obs import validate_chrome_trace
+
+
+def main(paths: list[str]) -> int:
+    if not paths:
+        print("usage: validate_trace.py TRACE.json [TRACE.json ...]",
+              file=sys.stderr)
+        return 2
+    failed = 0
+    for path in paths:
+        try:
+            with open(path) as f:
+                trace = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"FAIL {path}: {e}")
+            failed += 1
+            continue
+        errors = validate_chrome_trace(trace)
+        if errors:
+            failed += 1
+            print(f"FAIL {path}: {len(errors)} problem(s)")
+            for err in errors[:20]:
+                print(f"  - {err}")
+            if len(errors) > 20:
+                print(f"  ... and {len(errors) - 20} more")
+        else:
+            n = len(trace.get("traceEvents", []))
+            print(f"OK   {path}: {n} events")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,45 @@
+"""Telemetry for the serving engines and the edge simulator (DESIGN.md §8).
+
+Three pillars: ``trace`` (bounded span/event recorder with
+Chrome/Perfetto export, plus the sim-timeline renderer), ``metrics``
+(counters/gauges/histograms registry, JSON + Prometheus), and
+``compare`` (the sim-vs-measured per-phase calibration report).
+"""
+
+from repro.obs.compare import (
+    DEFAULT_KIND_TO_PHASE,
+    compare_report,
+    measured_phase_stats,
+    write_report,
+)
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Series,
+)
+from repro.obs.trace import (
+    NULL_TRACER,
+    Tracer,
+    tag_key,
+    tasks_to_chrome,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "NULL_TRACER",
+    "Tracer",
+    "tag_key",
+    "tasks_to_chrome",
+    "validate_chrome_trace",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Series",
+    "DEFAULT_KIND_TO_PHASE",
+    "compare_report",
+    "measured_phase_stats",
+    "write_report",
+]

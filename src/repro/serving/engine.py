@@ -28,9 +28,18 @@ of crashing the batch. Fault injection (``serving/faults.py``) threads
 through both engines behind a no-op default; ``engine.auditor`` runs
 the page-pool invariant check after every step when set.
 
-Both engines record per-token wall-clock timestamps
-(``token_walltimes``) so benchmarks can report time-to-first-token and
-inter-token latency next to tokens/s.
+Both engines carry a ``MetricsRegistry`` (``engine.metrics``, fresh per
+``serve()`` call) holding the per-token wall-clock timestamps, pool
+occupancy, step-time histograms and preemption/NaN counters the
+benchmarks read — ``token_walltimes`` / ``occupancy_log`` /
+``preemption_count`` / ``recompute_tokens`` remain as thin read-only
+views onto it — and an optional ``Tracer`` (DESIGN.md §8) that, when
+enabled, records per-request lifecycle spans driven by the
+``lifecycle.py`` state machine, per-step spans annotated with batch
+composition (compile-shape kind, chunk tokens, live decode slots) and
+the dispatch vs host-sync split, pool-occupancy counter tracks, and
+preemption/NaN instants. The default ``NULL_TRACER`` costs one
+truthiness check per step.
 """
 
 from __future__ import annotations
@@ -46,6 +55,8 @@ import numpy as np
 
 from repro.core.autotune import tune_pool_headroom, tune_prefill_chunk
 from repro.models.api import Model
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.serving.faults import NO_FAULTS
 from repro.serving.lifecycle import (
     Request,
@@ -71,9 +82,48 @@ def _finite_rows(logits):
     return jnp.all(jnp.isfinite(logits), axis=-1)
 
 
+# lifecycle states that open a nested phase span on the request's track
+_PHASE_STATES = frozenset({
+    RequestState.PREFILLING, RequestState.DECODING, RequestState.PREEMPTED,
+})
+
+
+def _trace_request(rec: RequestRecord, tracer) -> None:
+    """Open a per-request lifecycle span and drive its nested phase
+    spans off the state machine itself: every ``RequestRecord.to()``
+    closes the span of the state it leaves and opens one for the state
+    it enters (prefilling / decoding / preempted), so preemption +
+    chunked re-prefill shows up as nested spans inside ONE request span
+    — no emit sites scattered through the scheduler (DESIGN.md §8)."""
+    if not tracer.enabled:
+        return
+    track = f"req{rec.rid}"
+    tracer.begin("request", track=track, cat="lifecycle", args={
+        "rid": rec.rid,
+        "prompt_len": int(len(rec.request.prompt)),
+        "max_new_tokens": int(rec.request.max_new_tokens),
+    })
+
+    def observe(r: RequestRecord, old: RequestState,
+                new: RequestState) -> None:
+        if old in _PHASE_STATES:
+            tracer.end(old.value, track=track)
+        if new in _PHASE_STATES:
+            tracer.begin(new.value, track=track, cat="lifecycle")
+        elif new in TERMINAL_STATES:
+            tracer.end("request", track=track, args={
+                "state": new.value,
+                "tokens": len(r.tokens),
+                "preemptions": r.preemptions,
+                "error": r.error,
+            })
+
+    rec.observer = observe
+
+
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_len: int = 512,
-                 batch_size: int = 4, kv_dtype=None):
+                 batch_size: int = 4, kv_dtype=None, tracer=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -82,7 +132,10 @@ class ServingEngine:
         # kv_dtype="int8": prefill builds a quantized dense cache and
         # decode appends per-row quantized tokens (DESIGN.md §5).
         self.kv_dtype = jnp.dtype(kv_dtype) if kv_dtype is not None else None
-        self.token_walltimes: dict[int, list[float]] = {}
+        # telemetry (DESIGN.md §8): registry is fresh per serve() call;
+        # the tracer defaults to the shared disabled instance
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = MetricsRegistry()
         self.serve_t0 = 0.0
         # lifecycle + fault harness (DESIGN.md §7); injector defaults to
         # the shared no-op, results hold one RequestRecord per rid
@@ -121,11 +174,18 @@ class ServingEngine:
     def _prefill(self, tokens):
         return self._prefill_fn(self.params, tokens)
 
+    @property
+    def token_walltimes(self) -> dict:
+        """Back-compat view: rid -> per-token wall-clock timestamps
+        (now held by the metrics registry)."""
+        return self.metrics.series("token_walltime_s").by_key
+
     def _record(self, r: Request) -> RequestRecord:
         rec = self.results.get(r.rid)
         if rec is None or rec.request is not r:
             rec = RequestRecord(r)
             self.results[r.rid] = rec
+            _trace_request(rec, self.tracer)
         return rec
 
     def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
@@ -136,7 +196,7 @@ class ServingEngine:
         raises out of the whole wave (``self.results`` carries the
         per-request lifecycle state next to the token dict).
         """
-        self.token_walltimes = {}
+        self.metrics = MetricsRegistry()
         self.results = {}
         self._step_idx = 0
         self.serve_t0 = time.perf_counter()
@@ -182,7 +242,9 @@ class ServingEngine:
                                 prompt=np.ones((plen,), np.int32),
                                 max_new_tokens=0))
         prompts = np.stack([r.prompt for r in reqs]).astype(np.int32)
-        logits, cache = self._prefill(jnp.asarray(prompts))
+        with self.tracer.span("prefill_dispatch", track="engine",
+                              args={"plen": plen, "n_real": n_real}):
+            logits, cache = self._prefill(jnp.asarray(prompts))
 
         # Dummy rows never decode tokens: real requests alone bound the
         # wave length, and the argmax + device->host transfer below run
@@ -196,13 +258,27 @@ class ServingEngine:
             else:
                 rec.to(RequestState.DECODING)
 
+        m = self.metrics
+        m_walltimes = m.series("token_walltime_s",
+                               "per-token wall-clock stamps by rid")
+        m_nan = m.counter("serving.nan_guard_trips",
+                          "slots failed by the finite-logit guard")
+        m_tokens = m.counter("serving.tokens_generated")
+        m_step = m.histogram("engine.step_s.wave_decode",
+                             "host sync + bookkeeping + decode dispatch")
+        m_sync = m.histogram("engine.host_sync_s",
+                             "device->host transfer wait per step")
+        tr = self.tracer
         token, packed = self._next_token(logits, n_real)
         for step in range(max_new):
+            t_step0 = time.perf_counter()
             self.injector.step_begin(self, self._step_idx)
             # One device->host transfer per step, live rows only;
             # per-row int() on the device array would sync the stream
             # once per request.
             raw = np.asarray(packed)
+            t_sync = time.perf_counter()
+            m_sync.observe(t_sync - t_step0)
             token_host = raw[:n_real]
             ok_host = np.asarray(
                 self.injector.corrupt_step_ok(
@@ -217,6 +293,7 @@ class ServingEngine:
                     # per-request failure isolation: the NaN/inf guard
                     # fails this slot; the rest of the wave decodes on
                     rec.fail("non-finite logits")
+                    m_nan.inc()
                     done[i] = True
                     continue
                 dl = r.deadline_s
@@ -227,7 +304,8 @@ class ServingEngine:
                 t = int(token_host[i])
                 out[r.rid].append(t)
                 rec.tokens.append(t)
-                self.token_walltimes.setdefault(r.rid, []).append(now)
+                m_walltimes.observe(r.rid, now)
+                m_tokens.inc()
                 if t == r.eos_id or len(out[r.rid]) >= r.max_new_tokens:
                     rec.finish()
                     done[i] = True
@@ -236,6 +314,15 @@ class ServingEngine:
             logits, cache = self._decode(self.params, cache, token,
                                          jnp.int32(plen + step))
             token, packed = self._next_token(logits, n_real)
+            t_end = time.perf_counter()
+            m_step.observe(t_end - t_step0)
+            if tr.enabled:
+                tr.complete("step", tr.to_us(t_step0),
+                            (t_end - t_step0) * 1e6, track="engine",
+                            args={"kind": "wave_decode", "step": step,
+                                  "n_real": n_real})
+                tr.complete("host_sync", tr.to_us(t_step0),
+                            (t_sync - t_step0) * 1e6, track="engine")
         for rec in recs:
             if rec.state not in TERMINAL_STATES:
                 rec.finish()
@@ -276,7 +363,7 @@ class ContinuousBatchingEngine:
                  chunk_size: int | None = None,
                  decode_reserve_frac: float = 1.0,
                  headroom_pages: int | None = None,
-                 max_preemptions: int = 32):
+                 max_preemptions: int = 32, tracer=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -320,13 +407,15 @@ class ContinuousBatchingEngine:
         self.headroom_pages = headroom_pages
         self.max_preemptions = max_preemptions
         self.peak_pages_used = 0  # across serve() calls, for benchmarks
-        # per-decode-step pool occupancy of the LAST serve() call, so
-        # benchmark KV-byte claims are auditable over time
-        self.occupancy_log: list[int] = []
         # per-step scheduler trace of the LAST serve() call: whether a
         # prompt chunk was packed and how many decode slots were live
         self.step_log: list[dict] = []
-        self.token_walltimes: dict[int, list[float]] = {}
+        # telemetry (DESIGN.md §8): the registry is recreated per
+        # serve() call (occupancy_log / token_walltimes /
+        # preemption_count / recompute_tokens read through it); the
+        # tracer defaults to the shared disabled instance
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = MetricsRegistry()
         self.serve_t0 = 0.0
         # lifecycle + fault harness (DESIGN.md §7): injector/auditor are
         # plain attributes so tests/benchmarks swap them between serve()
@@ -334,8 +423,6 @@ class ContinuousBatchingEngine:
         self.injector = NO_FAULTS
         self.auditor = None
         self.results: dict[int, RequestRecord] = {}
-        self.preemption_count = 0      # last serve() call
-        self.recompute_tokens = 0      # last serve() call
         self._cancel_req: set[int] = set()
 
         # Host<->device protocol: each step kind takes the host state as
@@ -418,6 +505,27 @@ class ContinuousBatchingEngine:
         boundary (queued, mid-prefill, or mid-decode — pages freed)."""
         self._cancel_req.add(rid)
 
+    # -- back-compat views onto the metrics registry (DESIGN.md §8) ------
+
+    @property
+    def occupancy_log(self) -> list:
+        """Pages in use per engine step of the last serve() call."""
+        return self.metrics.gauge("pool.pages_used").series
+
+    @property
+    def token_walltimes(self) -> dict:
+        """rid -> per-token wall-clock timestamps, last serve() call."""
+        return self.metrics.series("token_walltime_s").by_key
+
+    @property
+    def preemption_count(self) -> int:
+        return int(self.metrics.counter("serving.preemptions").value)
+
+    @property
+    def recompute_tokens(self) -> int:
+        return int(
+            self.metrics.counter("serving.recompute_tokens").value)
+
     def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
         B, ps = self.batch_size, self.page_size
         mgr = PagedKVCacheManager(self.num_pages, ps, num_slots=B,
@@ -427,18 +535,36 @@ class ContinuousBatchingEngine:
         cache = self.model.make_cache(B, self.max_len, cache_layout="paged",
                                       page_size=ps, num_pages=self.num_pages,
                                       kv_dtype=self.kv_dtype)
-        self.occupancy_log = []
         self.step_log = []
-        self.token_walltimes = {}
         self.results = {}
-        self.preemption_count = 0
-        self.recompute_tokens = 0
         self._cancel_req = set()
+        self.metrics = m = MetricsRegistry()
+        m_occ = m.gauge("pool.pages_used",
+                        "paged pool pages in use per engine step")
+        m_walltimes = m.series("token_walltime_s",
+                               "per-token wall-clock stamps by rid")
+        m_preempt = m.counter("serving.preemptions",
+                              "mid-decode evictions (pool exhaustion)")
+        m_recompute = m.counter("serving.recompute_tokens",
+                                "prompt+prefix tokens re-prefilled")
+        m_nan = m.counter("serving.nan_guard_trips",
+                          "slots failed by the finite-logit guard")
+        m_tokens = m.counter("serving.tokens_generated")
+        m_sync = m.histogram("engine.host_sync_s",
+                             "device->host transfer wait per step")
+        m_step_kind = {
+            k: m.histogram(f"engine.step_s.{k}",
+                           "step walltime (pack+dispatch+sync) by kind")
+            for k in ("decode", "chunk", "chunk+decode")
+        }
+        tr = self.tracer
+        tracing = tr.enabled
         self.serve_t0 = time.perf_counter()
         queue: deque[RequestRecord] = deque()
         for r in requests:
             rec = RequestRecord(r)
             self.results[r.rid] = rec
+            _trace_request(rec, tr)
             err = validate_request(r, max_len=self.max_len,
                                    pool_pages=self.num_pages - 1,
                                    page_size=ps)
@@ -470,7 +596,11 @@ class ContinuousBatchingEngine:
             retire(slot)
             rec.to(RequestState.PREEMPTED)
             rec.preemptions += 1
-            self.preemption_count += 1
+            m_preempt.inc()
+            if tracing:
+                tr.instant("preempt", track="engine",
+                           args={"rid": rec.rid,
+                                 "tokens": len(rec.tokens)})
             if rec.preemptions > self.max_preemptions:
                 rec.fail(f"preempted > {self.max_preemptions} times "
                          f"(pool thrashing)")
@@ -566,7 +696,7 @@ class ContinuousBatchingEngine:
                     rec.admit_seq = next(admit_seq)
                 if rec.resumed:
                     rec.recompute_tokens += plen
-                    self.recompute_tokens += plen
+                    m_recompute.inc(plen)
                 rec.to(RequestState.PREFILLING)
                 self.peak_pages_used = max(self.peak_pages_used,
                                            mgr.peak_pages_used)
@@ -595,9 +725,14 @@ class ContinuousBatchingEngine:
                 step_idx += 1
                 continue
             stalls = 0
-            self.occupancy_log.append(mgr.pages_used)
+            m_occ.record(mgr.pages_used)
             self.step_log.append({"prefill_in_flight": pending is not None,
                                   "live_decode": len(active)})
+            kind = ("decode" if pending is None
+                    else ("chunk+decode" if active else "chunk"))
+            if tracing:
+                tr.counter("pool.pages_used", mgr.pages_used, track="pool")
+            t_step0 = time.perf_counter()
             dec_table = mgr.table()
             if pending is not None:
                 rec, slot, q0, rprompt = pending
@@ -633,17 +768,35 @@ class ContinuousBatchingEngine:
                                      dec_table.ravel()])
                 packed, cache = self._decode(self.params, cache,
                                              jnp.asarray(hs))
+            t_disp = time.perf_counter()
             # the step's single device->host transfer carries decode
             # tokens, (on the final chunk) the admitted request's first
             # token, AND the finite-guard flags — no per-admit argmax
             # sync, no second sync for the NaN guard
             raw = np.asarray(packed)
+            now = time.perf_counter()
+            m_sync.observe(now - t_disp)
+            m_step_kind[kind].observe(now - t_step0)
+            if tracing:
+                # step span split: host-side pack + async dispatch vs
+                # the device->host sync that rides the step's transfer
+                tr.complete("step", tr.to_us(t_step0),
+                            (now - t_step0) * 1e6, track="engine", args={
+                                "kind": kind, "step": step_idx,
+                                "live_decode": len(active),
+                                "chunk_tokens": (clen if pending is not None
+                                                 else 0),
+                                "pages_used": mgr.pages_used,
+                            })
+                tr.complete("dispatch", tr.to_us(t_step0),
+                            (t_disp - t_step0) * 1e6, track="engine")
+                tr.complete("host_sync", tr.to_us(t_disp),
+                            (now - t_disp) * 1e6, track="engine")
             half = raw.shape[0] // 2
             token_host = raw[:half]
             ok_host = np.asarray(
                 self.injector.corrupt_step_ok(step_idx,
                                               raw[half:].astype(bool)))
-            now = time.perf_counter()
             for slot_i in list(active.keys()):
                 if slot_i not in active:
                     continue  # preempted by an earlier slot's recovery
@@ -652,12 +805,14 @@ class ContinuousBatchingEngine:
                     # NaN/inf isolation: fail THIS slot, free its pages,
                     # let the rest of the batch decode on
                     rec_i.fail("non-finite logits")
+                    m_nan.inc()
                     del active[slot_i]
                     retire(slot_i)
                     continue
                 t = int(token_host[slot_i])
                 rec_i.tokens.append(t)
-                self.token_walltimes.setdefault(rec_i.rid, []).append(now)
+                m_walltimes.observe(rec_i.rid, now)
+                m_tokens.inc()
                 positions[slot_i] += 1
                 try:
                     if self.injector.alloc_fault(step_idx, n_append,
@@ -684,12 +839,13 @@ class ContinuousBatchingEngine:
                 if q0 >= plen:  # prefill complete: first token is out
                     if not ok_host[-1]:
                         rec.fail("non-finite logits")
+                        m_nan.inc()
                         retire(slot)
                     else:
                         t = int(token_host[-1])
                         rec.tokens.append(t)
-                        self.token_walltimes.setdefault(
-                            rec.rid, []).append(now)
+                        m_walltimes.observe(rec.rid, now)
+                        m_tokens.inc()
                         if t == rec.request.eos_id or rec.remaining <= 0:
                             rec.finish()  # done straight out of prefill
                             retire(slot)

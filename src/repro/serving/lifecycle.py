@@ -93,6 +93,13 @@ class RequestRecord:
     preemptions: int = 0
     recompute_tokens: int = 0    # prompt+prefix tokens re-prefilled
     admit_seq: int | None = None  # first-admission order (preemption age)
+    # transition observer: called as (record, old_state, new_state) AFTER
+    # every successful ``to()`` — how the engines drive per-request trace
+    # spans off the state machine itself (DESIGN.md §8) instead of
+    # sprinkling emit sites around the scheduler. None costs one truthy
+    # check per transition.
+    observer: object = dataclasses.field(default=None, repr=False,
+                                         compare=False)
 
     @property
     def rid(self) -> int:
@@ -125,18 +132,21 @@ class RequestRecord:
                 f"request {self.rid}: illegal transition "
                 f"{self.state.value} -> {new.value}"
             )
-        self.state = new
+        old, self.state = self.state, new
+        if self.observer is not None:
+            self.observer(self, old, new)
 
     def finish(self) -> None:
         self.to(RequestState.FINISHED)
 
     def cancel(self, reason: str = "cancelled") -> None:
-        self.to(RequestState.CANCELLED)
+        # reason is set BEFORE the transition so observers see it
         self.error = reason
+        self.to(RequestState.CANCELLED)
 
     def fail(self, reason: str) -> None:
-        self.to(RequestState.FAILED)
         self.error = reason
+        self.to(RequestState.FAILED)
 
 
 def validate_request(request: Request, *, max_len: int,

@@ -173,6 +173,41 @@ class ChunkedPrefillWorkload:
             tri + int(self.preempt_rate * tri) + sum(self.decode_kv_lens)
         )
 
+    def n_chunks(self, chunk: int | None) -> int:
+        """Engine steps this admission takes at ``chunk`` prompt tokens
+        per step (``None`` = monolithic whole-prompt admission)."""
+        if chunk is None:
+            return 1
+        return -(-self.prompt // chunk)
+
+
+def serving_phase_workloads(name: str, prompt_lens, max_new: int, *,
+                            heads: int, emb: int, group: int = 1,
+                            batch: int = 4, kv_bpe: int | None = None
+                            ) -> dict:
+    """Sim workloads matching the continuous engine's two step kinds,
+    keyed by the compare phases of ``repro.obs.compare`` (DESIGN.md §8).
+
+    Built from the MEASURED request set so the simulated schedule prices
+    the same scenario the serving trace recorded: ``decode`` is one
+    engine step over ``batch`` live slots at mid-decode cache depth
+    (prompt + max_new/2); ``prefill_chunk`` is the admission of the
+    longest prompt while the remaining slots decode — exactly what a
+    ``chunk+decode`` step dispatches.
+    """
+    lens = sorted((int(p) for p in prompt_lens), reverse=True)
+    if not lens:
+        raise ValueError("serving_phase_workloads needs >= 1 prompt")
+    kv_lens = tuple(p + max_new // 2 for p in lens[:batch])
+    return {
+        "decode": PagedDecodeWorkload(
+            f"{name}-decode", heads=heads, emb=emb, group=group,
+            kv_lens=kv_lens, kv_bpe=kv_bpe),
+        "prefill_chunk": ChunkedPrefillWorkload(
+            f"{name}-admit", heads=heads, emb=emb, group=group,
+            prompt=lens[0], decode_kv_lens=kv_lens[1:], kv_bpe=kv_bpe),
+    }
+
 
 # Table 1: Network Configuration and Hyper-Parameters.
 PAPER_NETWORKS = {
