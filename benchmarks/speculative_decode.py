@@ -1,0 +1,273 @@
+"""Speculative vs plain paged decode on a draftable request mix.
+
+Two views (DESIGN.md §9):
+
+* **measured** — the continuous-batching engine serves the same
+  DRAFTABLE request set (prompts built from short repeating cycles —
+  the n-gram drafter's natural case) plain and speculatively, fp32 and
+  int8 pools, asserting token-for-token greedy parity on every
+  scenario — including one pass with an injected mid-run pool
+  exhaustion (recompute preemption firing mid-speculation). Reports
+  acceptance rate, tokens landed per verify step (accepted drafts +
+  the bonus token) and host wall tokens/s.
+* **simulated** — a speculative generation at the REAL architecture's
+  attention shape over a long-context mix, priced by the edge-device
+  event simulator at the MEASURED acceptance rate: the §4.2 grid
+  search over the joint (H_h, page, precision, DEPTH) space picks the
+  speculation depth (the sixth factor), and the speedup is its cycles
+  vs the same search pinned to k=1 (plain decode). The page-granular
+  KV gather is charged once per verify step, so depth amortizes
+  decode's dominant DMA cost.
+
+Writes ``BENCH_spec.json`` at the repo root. ``--smoke`` shrinks the
+request set for the CI invocation.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, get_smoke
+from repro.models import build_model
+from repro.serving import (
+    NO_FAULTS,
+    ContinuousBatchingEngine,
+    PoolAuditor,
+    Request,
+    ScriptedFaults,
+)
+from repro.sim import EDGE_HW, SpeculativeDecodeWorkload, simulate
+from repro.sim.schedules import build_schedule, tiling_space
+
+try:  # package mode (benchmarks/run.py) vs script mode (ci.sh)
+    from benchmarks.common import timed_serve
+except ImportError:
+    from common import timed_serve
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_spec.json"
+
+ARCH = "internlm2-1.8b"
+MAX_LEN = 64
+BATCH = 4
+PAGE = 8
+MAX_NEW = 10
+SPEC_DEPTH = 4
+
+
+def make_draftable_requests(cfg, n: int, seed: int = 0, *,
+                            max_new: int = MAX_NEW) -> list[Request]:
+    """Prompts tiled from 3-5-token cycles: summarization/extraction-
+    style context reuse in miniature, so prompt lookup actually hits."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        period = int(rng.integers(3, 6))
+        plen = int(rng.integers(12, 40))
+        cycle = rng.integers(3, cfg.vocab_size, size=(period,))
+        prompt = np.tile(cycle, -(-plen // period))[:plen].astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=max_new,
+                            eos_id=-2))
+    return reqs
+
+
+def _assert_parity(want: dict, got: dict, scenario: str) -> None:
+    assert set(want) == set(got), scenario
+    for rid in want:
+        np.testing.assert_array_equal(
+            want[rid], got[rid],
+            err_msg=f"speculative output diverged ({scenario}, rid {rid})")
+
+
+def measured_section(n_requests: int) -> dict:
+    cfg = get_smoke(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    requests = make_draftable_requests(cfg, n_requests)
+
+    def engine(**kw):
+        return ContinuousBatchingEngine(model, params, max_len=MAX_LEN,
+                                        batch_size=BATCH, page_size=PAGE,
+                                        **kw)
+
+    scenarios: dict[str, dict] = {}
+    for kv_dtype in (None, "int8"):
+        tag = "int8" if kv_dtype else "fp32"
+        plain = engine(kv_dtype=kv_dtype)
+        out_p, sec_p, _ = timed_serve(plain, requests)
+        spec = engine(kv_dtype=kv_dtype, spec_depth=SPEC_DEPTH)
+        out_s, sec_s, _ = timed_serve(spec, requests)
+        _assert_parity(out_p, out_s, tag)
+
+        st = spec.spec_stats
+        n_verify = spec.metrics.histogram("engine.step_s.verify").count
+        tokens = sum(len(v) for v in out_p.values())
+        # every verify step lands accepted drafts + one bonus token
+        tokens_per_verify = ((st["accepted"] + n_verify) / n_verify
+                             if n_verify else 0.0)
+        scenarios[tag] = {
+            "plain_seconds": sec_p,
+            "spec_seconds": sec_s,
+            "plain_tokens_per_s": tokens / sec_p,
+            "spec_tokens_per_s": tokens / sec_s,
+            "generated_tokens": tokens,
+            "verify_steps": n_verify,
+            "drafted": st["drafted"],
+            "accepted": st["accepted"],
+            "acceptance_rate": st["acceptance_rate"],
+            "tokens_per_verify_step": tokens_per_verify,
+            "parity": True,
+        }
+
+    # injected mid-run exhaustion: preemption fires mid-speculation and
+    # the recomputed requests must still match plain greedy exactly
+    spec = engine(spec_depth=SPEC_DEPTH)
+    total = scenarios["fp32"]["generated_tokens"]
+    burst = frozenset({total // 3, (2 * total) // 3})
+    aud = PoolAuditor()
+    spec.injector = ScriptedFaults(exhaust_at_appends=burst)
+    spec.auditor = aud
+    try:
+        out_f = spec.serve([Request(**r.__dict__) for r in requests])
+    finally:
+        spec.injector = NO_FAULTS
+        spec.auditor = None
+    plain = engine()
+    out_p = plain.serve([Request(**r.__dict__) for r in requests])
+    _assert_parity(out_p, out_f, "preemption")
+    preempt = {
+        "burst_appends": sorted(burst),
+        "preemptions": spec.preemption_count,
+        "pages_leaked": spec._mgr.pages_used,
+        "auditor_steps": aud.steps_checked,
+        "parity": True,
+    }
+
+    return {
+        "arch": cfg.name,
+        "n_requests": len(requests),
+        "spec_depth": SPEC_DEPTH,
+        "scenarios": scenarios,
+        "preemption": preempt,
+        "acceptance_rate": scenarios["fp32"]["acceptance_rate"],
+        "tokens_per_verify_step": scenarios["fp32"]["tokens_per_verify_step"],
+    }
+
+
+def sim_section(accept_rate: float) -> dict:
+    """Speculative generation at the real architecture's shape, priced
+    at the MEASURED acceptance rate. One sweep over the joint
+    (H_h, page, precision, depth) space yields both the searched winner
+    and the best k=1 point — the plain-decode control the speedup is
+    quoted against (same search freedom, speculation off).
+    """
+    arch = get_arch(ARCH)
+    rng = np.random.default_rng(1)
+    kv_lens = tuple(int(n) for n in rng.integers(512, 4096, size=8))
+    group = arch.num_heads // arch.num_kv_heads
+    w = SpeculativeDecodeWorkload(
+        f"{ARCH}-spec", heads=arch.num_kv_heads, emb=arch.hd, group=group,
+        kv_lens=kv_lens, new_tokens=32, accept_rate=accept_rate)
+
+    best = best_k1 = None
+    evals = 0
+    for t in tiling_space(w, EDGE_HW):
+        tasks = build_schedule("speculative_decode", w, t, EDGE_HW)
+        evals += 1
+        if tasks is None:
+            continue
+        r = simulate(tasks, EDGE_HW)
+        if best is None or r.cycles < best[1].cycles:
+            best = (t, r)
+        if t.spec == 1 and (best_k1 is None or r.cycles < best_k1[1].cycles):
+            best_k1 = (t, r)
+    assert best is not None and best_k1 is not None, "no feasible tiling"
+    t, r = best
+    t1, r1 = best_k1
+
+    def tokens_per_s(res, spec):
+        steps = w.n_steps(spec)
+        sec = res.cycles / (EDGE_HW.freq_ghz * 1e9)
+        return len(kv_lens) * w.new_tokens / sec, steps
+
+    tps, steps = tokens_per_s(r, t.spec or 1)
+    tps1, steps1 = tokens_per_s(r1, 1)
+    return {
+        "kv_lens": list(kv_lens),
+        "new_tokens_per_seq": w.new_tokens,
+        "accept_rate": accept_rate,
+        "searched": {
+            "spec_depth": t.spec,
+            "page_size": t.nkv,
+            "kv_bpe": t.kv_bpe,
+            "hh": t.hh,
+            "cycles": r.cycles,
+            "verify_steps": steps,
+            "tokens_per_s": tps,
+            "evals": evals,
+        },
+        "plain_k1": {
+            "page_size": t1.nkv,
+            "kv_bpe": t1.kv_bpe,
+            "hh": t1.hh,
+            "cycles": r1.cycles,
+            "decode_steps": steps1,
+            "tokens_per_s": tps1,
+        },
+        "speedup_vs_plain": tps / tps1,
+    }
+
+
+def run(n_requests: int) -> dict:
+    measured = measured_section(n_requests)
+    sim = sim_section(max(measured["acceptance_rate"], 0.05))
+    return {
+        "measured": measured,
+        "sim": sim,
+        "headline": {
+            "acceptance_rate": measured["acceptance_rate"],
+            "tokens_per_verify_step": measured["tokens_per_verify_step"],
+            "searched_spec_depth": sim["searched"]["spec_depth"],
+            "sim_speedup_vs_plain": sim["speedup_vs_plain"],
+        },
+    }
+
+
+def main(emit, smoke: bool = False) -> dict:
+    report = run(n_requests=6 if smoke else 12)
+    OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    h = report["headline"]
+    emit(
+        "speculative_decode/verify",
+        report["measured"]["scenarios"]["fp32"]["spec_seconds"] * 1e6,
+        f"accept={h['acceptance_rate']:.3f} "
+        f"tok/verify={h['tokens_per_verify_step']:.2f} "
+        f"sim_speedup={h['sim_speedup_vs_plain']:.2f}x "
+        f"searched_k={h['searched_spec_depth']}",
+    )
+    return report
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    r = main(lambda name, us, derived="": print(f"{name},{us:.3f},{derived}"),
+             smoke=smoke)
+    m, s = r["measured"], r["sim"]
+    for tag, sc in m["scenarios"].items():
+        print(f"{tag}: parity OK, accept={sc['acceptance_rate']:.3f}, "
+              f"{sc['tokens_per_verify_step']:.2f} tok/verify-step "
+              f"({sc['verify_steps']} verify steps, "
+              f"{sc['accepted']}/{sc['drafted']} drafts accepted)")
+    p = m["preemption"]
+    print(f"preemption: parity OK, {p['preemptions']} preemptions, "
+          f"{p['pages_leaked']} pages leaked "
+          f"({p['auditor_steps']} steps audited)")
+    print(f"sim: searched k={s['searched']['spec_depth']} "
+          f"page={s['searched']['page_size']} kv_bpe={s['searched']['kv_bpe']}"
+          f" -> {s['searched']['tokens_per_s']:.0f} tok/s vs "
+          f"k=1 {s['plain_k1']['tokens_per_s']:.0f} tok/s "
+          f"({s['speedup_vs_plain']:.2f}x)")

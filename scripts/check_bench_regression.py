@@ -25,6 +25,15 @@ same process: machine-normalized like the others) — is guarded the same
 way so recompute-preemption overhead can't silently grow
 (DESIGN.md §7). Baselines missing the key (pre-lifecycle) skip it.
 
+``--spec-baseline/--spec-current BENCH_spec.json`` guard the
+speculative-decoding benchmark (DESIGN.md §9) the same way: the
+simulated speedup of the searched speculation depth over the k=1
+control must not drop more than ``--spec-threshold`` below the
+committed baseline, and the measured draft acceptance rate must not
+fall more than ``--accept-threshold`` ABSOLUTE below it (rates live in
+[0, 1], so a relative guard would explode near zero). Baselines
+missing the file or the keys (pre-speculation) skip both guards.
+
 ``--metrics METRICS.json`` additionally ingests the metrics-registry
 dump the traced serving pass writes (DESIGN.md §8) and
 consistency-checks it against CURRENT.json: the ``bench.*_ratio``
@@ -81,6 +90,50 @@ def check_metrics(metrics: dict, cur: dict) -> list[str]:
     return problems
 
 
+def check_spec(base_path: Path, cur_path: Path, spec_threshold: float,
+               accept_threshold: float) -> int:
+    """Guard BENCH_spec.json's headline: simulated speculative speedup
+    (relative drop) and measured acceptance rate (absolute drop).
+    Missing/unreadable baselines or absent keys skip, not fail."""
+    try:
+        base = json.loads(base_path.read_text()).get("headline", {})
+    except (OSError, json.JSONDecodeError):
+        print(f"bench-guard: no usable spec baseline at {base_path}; "
+              "skipping spec guards")
+        return 0
+    cur = json.loads(cur_path.read_text()).get("headline", {})
+
+    b_sp, c_sp = base.get("sim_speedup_vs_plain"), \
+        cur.get("sim_speedup_vs_plain")
+    if b_sp and c_sp is not None:
+        drop = 1.0 - c_sp / b_sp
+        print(f"bench-guard: simulated speculative speedup: "
+              f"{b_sp:.2f}x -> {c_sp:.2f}x ({-drop:+.1%})")
+        if drop > spec_threshold:
+            print(f"bench-guard: speculative speedup dropped {drop:.1%} > "
+                  f"{spec_threshold:.0%} vs committed baseline",
+                  file=sys.stderr)
+            return 1
+    else:
+        print("bench-guard: no sim_speedup_vs_plain in one of the spec "
+              "files; skipping speedup guard")
+
+    b_ac, c_ac = base.get("acceptance_rate"), cur.get("acceptance_rate")
+    if b_ac is not None and c_ac is not None:
+        fall = b_ac - c_ac
+        print(f"bench-guard: measured draft acceptance: "
+              f"{b_ac:.3f} -> {c_ac:.3f} ({-fall:+.3f})")
+        if fall > accept_threshold:
+            print(f"bench-guard: acceptance rate fell {fall:.3f} > "
+                  f"{accept_threshold:.2f} (absolute) vs committed "
+                  f"baseline", file=sys.stderr)
+            return 1
+    else:
+        print("bench-guard: no acceptance_rate in one of the spec files; "
+              "skipping acceptance guard")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", type=Path)
@@ -96,7 +149,23 @@ def main() -> int:
     ap.add_argument("--metrics", type=Path, default=None,
                     help="metrics-registry JSON from the traced serving "
                          "pass; consistency-checked against CURRENT.json")
+    ap.add_argument("--spec-baseline", type=Path, default=None,
+                    help="committed BENCH_spec.json to guard against")
+    ap.add_argument("--spec-current", type=Path, default=None,
+                    help="freshly produced BENCH_spec.json")
+    ap.add_argument("--spec-threshold", type=float, default=0.15,
+                    help="max fractional drop allowed in the simulated "
+                         "speculative speedup vs the k=1 control")
+    ap.add_argument("--accept-threshold", type=float, default=0.20,
+                    help="max ABSOLUTE drop allowed in the measured "
+                         "draft acceptance rate")
     args = ap.parse_args()
+
+    if args.spec_baseline is not None and args.spec_current is not None:
+        rc = check_spec(args.spec_baseline, args.spec_current,
+                        args.spec_threshold, args.accept_threshold)
+        if rc:
+            return rc
 
     # An empty/unreadable baseline (e.g. `git show` truncated the temp
     # file before failing) means "no baseline", not a guard failure.

@@ -96,6 +96,44 @@ PY
 # the bf16 paged baseline (writes BENCH_quant.json).
 python benchmarks/quantized_decode.py --smoke
 
+# Speculative decoding smoke (DESIGN.md §9): plain-vs-speculative greedy
+# parity (fp32, int8, and through an injected preemption) + the sixth
+# tiling factor searched on the sim (writes BENCH_spec.json). The guard
+# compares the fresh headline against the committed baseline.
+SPEC_BASELINE="$(mktemp)"
+git show HEAD:BENCH_spec.json > "$SPEC_BASELINE" 2>/dev/null \
+  || cp BENCH_spec.json "$SPEC_BASELINE" 2>/dev/null || true
+python benchmarks/speculative_decode.py --smoke
+python scripts/check_bench_regression.py "$SPEC_BASELINE" BENCH_spec.json \
+  --spec-baseline "$SPEC_BASELINE" --spec-current BENCH_spec.json \
+  --spec-threshold 0.15 --accept-threshold 0.20
+rm -f "$SPEC_BASELINE"
+
+# Speculation hard gates: every scenario (incl. the preemption pass)
+# stayed token-for-token equal to plain greedy, verify steps landed
+# MORE than one token on the draftable mix, the simulated speedup
+# clears the §9 bar, and the depth came out of the search.
+python - <<'PY'
+import json
+
+r = json.load(open("BENCH_spec.json"))
+m, h = r["measured"], r["headline"]
+for tag, sc in m["scenarios"].items():
+    assert sc["parity"], f"{tag}: speculative output diverged"
+    assert sc["verify_steps"] > 0, f"{tag}: no verify steps ran"
+assert m["preemption"]["parity"], "preemption pass diverged"
+assert m["preemption"]["pages_leaked"] == 0, m["preemption"]
+assert h["tokens_per_verify_step"] > 1.0, (
+    f"verify steps landed <= 1 token: {h}")
+assert h["sim_speedup_vs_plain"] > 1.3, (
+    f"simulated speculative speedup below 1.3x: {h}")
+assert h["searched_spec_depth"] is not None and h["searched_spec_depth"] >= 1
+print(f"speculation gates OK: accept={h['acceptance_rate']:.3f}, "
+      f"{h['tokens_per_verify_step']:.2f} tok/verify-step, "
+      f"sim speedup {h['sim_speedup_vs_plain']:.2f}x at "
+      f"searched k={h['searched_spec_depth']}")
+PY
+
 python - <<'PY'
 import numpy as np
 import jax.numpy as jnp

@@ -173,6 +173,50 @@ def tune_pool_headroom(*, num_slots: int, chunk_pages: int,
 
 
 @functools.lru_cache(maxsize=1024)
+def tune_spec_depth(*, b_h: int, n_ctx: int, e: int, itemsize: int = 2,
+                    page: int = 16, kv_itemsize: int | None = None,
+                    accept_rate: float = 0.7, max_depth: int = 8) -> int:
+    """Engine-default speculation depth k for paged verify steps (§9).
+
+    A verify step reads every live KV page ONCE for all k candidate
+    positions — the k-fold amortization of decode's dominant DMA cost —
+    while the MXU/VPU streams grow linearly in k and each extra draft
+    position is only *useful* if every draft before it was accepted.
+    With a geometric acceptance model (each successive draft matches
+    the model's greedy choice with probability ``accept_rate``), a
+    k-deep step emits
+
+        E(k) = 1 + p + ... + p^(k-1)   (accepted prefix + bonus token)
+
+    expected tokens, so the analytical throughput objective is
+    E(k) / step_cost(k) with step_cost the same MXU/HBM/VPU
+    max-of-streams model as ``tune_prefill_chunk`` plus the fixed
+    dispatch overhead. Returns the argmax k in [1, max_depth] — the
+    worst-case (full-context) cost, consistent with the other tuners.
+    The sim's tiling search treats the same depth as its sixth gene;
+    this closed form is the engine default when none is given.
+    """
+    p = min(max(accept_rate, 0.0), 1.0)
+    kv_item = itemsize if kv_itemsize is None else kv_itemsize
+    kv_row_bytes = e * kv_item + ((4 / page) if kv_item < itemsize else 0)
+    best_k, best_rate = 1, 0.0
+    for k in range(1, max_depth + 1):
+        mxu = 4.0 * b_h * k * n_ctx * e / MXU_FLOPS
+        # page traffic charged once per step, independent of k
+        hbm = (2 * b_h * n_ctx * kv_row_bytes
+               + 2 * b_h * k * e * itemsize) / HBM_BW
+        vpu = 6.0 * b_h * k * n_ctx / VPU_FLOPS
+        if kv_item < itemsize:
+            vpu += 2.0 * b_h * k * n_ctx / VPU_FLOPS
+        cost = max(mxu, hbm, vpu) + CHUNK_STEP_OVERHEAD_S
+        expected = k if p >= 1.0 else (1.0 - p**k) / (1.0 - p)
+        rate = expected / cost
+        if rate > best_rate:
+            best_k, best_rate = k, rate
+    return best_k
+
+
+@functools.lru_cache(maxsize=1024)
 def tune_attention(*, b_h: int, n_q: int, n_kv: int, e: int,
                    itemsize: int = 2,
                    vmem_budget: int = DEFAULT_VMEM_BUDGET,

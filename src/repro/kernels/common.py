@@ -13,6 +13,14 @@ defined exactly once:
 DESIGN.md §3 (fully-visible / diagonal-straddling / fully-masked) that
 both MAS variants, the flash kernel's index-map clamps, and the cost
 models key off.
+
+``three_band_select`` is the *in-kernel* form of the straddling-band
+mask shared by the paged prefill and verify kernels (DESIGN.md §6, §9):
+the row-0 query position is a traced scalar there (chunk offset /
+``kv_len - k``), so the fused ``cols <= rows & cols < kv_len`` select
+is built from traced values inside the kernel body rather than at
+trace time; ``rows_per_pos`` collapses grouped query-head rows onto one
+absolute position (the verify kernel's (k·G, page) tiles).
 """
 
 from __future__ import annotations
@@ -74,6 +82,25 @@ def quantize_q8(x, axes):
 def dequantize_q8(values, scales, axes):
     """Inverse of ``quantize_q8`` (up to the rounding error)."""
     return values.astype(jnp.float32) * jnp.expand_dims(scales, axes)
+
+
+def three_band_select(s, q0, col0, kv_len, *, rows_per_pos: int = 1):
+    """Fused straddling-band select for one paged score tile.
+
+    ``s`` is a (blk_q, blk_kv) score tile whose row ``i`` sits at
+    absolute query position ``q0 + i // rows_per_pos`` (grouped query
+    heads share one position when ``rows_per_pos`` is the GQA group)
+    and whose first column sits at absolute kv position ``col0``; ``q0``
+    and ``kv_len`` may be traced scalars. Applies the DESIGN.md §3
+    diagonal + kv-tail mask in ONE select: callers gate it behind the
+    ``j >= n_full`` band test so fully-visible pages never pay it.
+    """
+    blk_q, blk_kv = s.shape
+    rows = jax.lax.broadcasted_iota(
+        jnp.int32, (blk_q, blk_kv), 0) // rows_per_pos + q0
+    cols = jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 1) + col0
+    keep = jnp.logical_and(cols <= rows, cols < kv_len)
+    return jnp.where(keep, s, NEG_INF)
 
 
 def mask_kv_tail(s, col0, kv_len):

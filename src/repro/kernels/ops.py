@@ -23,6 +23,7 @@ from repro.kernels.flash_attention import flash_attention_flat
 from repro.kernels.mas_attention import mas_attention_flat
 from repro.kernels.paged_decode_attention import paged_decode_attention_flat
 from repro.kernels.paged_prefill_attention import paged_prefill_attention_flat
+from repro.kernels.paged_verify_attention import paged_verify_attention_flat
 
 
 def _default_interpret(interpret: bool | None) -> bool:
@@ -211,6 +212,58 @@ def paged_decode_attention(
         interpret=interp,
     )
     return of[:, :, :group].reshape(b, hq, e)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def paged_verify_attention(
+    q: jax.Array,           # (B, k, Hq, E) — k speculative positions/slot
+    k_pages: jax.Array,     # (Hkv, P, page, E) — global page pool
+    v_pages: jax.Array,     # (Hkv, P, page, E)
+    page_table: jax.Array,  # (B, max_pages) int32
+    kv_lens: jax.Array,     # (B,) int32 — INCL. the written candidate rows
+    q_starts: jax.Array,    # (B,) int32 — position of candidate row 0
+    *,
+    sm_scale: float | None = None,
+    k_scales: jax.Array | None = None,  # (Hkv, P) fp32 per-page scales
+    v_scales: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """k-token speculative verify against a block-table paged KV cache.
+
+    The candidate K/V rows per slot must already be written to the pool
+    (the model layer writes before it attends, DESIGN.md §9); position
+    i of slot b sits at absolute position ``q_starts[b] + i``, and rows
+    at or past ``kv_lens[b]`` (slots verifying fewer than k rows) come
+    back as full-context garbage the host discards. Returns
+    (B, k, Hq, E) attention outputs for every candidate position.
+    """
+    b, spec, hq, e = q.shape
+    hkv, _, page_size, _ = k_pages.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    interp = _default_interpret(interpret)
+
+    if not interp:
+        sub_kv = _sublane_multiple(k_pages.dtype)
+        assert page_size % sub_kv == 0, (
+            f"page_size {page_size} must be a multiple of the {sub_kv}-row "
+            f"sublane tile for {k_pages.dtype}"
+        )
+    # Position-major (k*G, E) Q rows: row i = query head i % G of
+    # speculative position i // G. Padding the group (not the whole
+    # block) keeps every pad row mapped to a valid position, so the
+    # in-kernel three-band mask needs no pad special-case.
+    g_pad = max(group, _sublane_multiple(q.dtype))
+    qg = q.reshape(b, spec, hkv, group, e).transpose(0, 2, 1, 3, 4)
+    qg = _pad_to(qg, 3, g_pad).reshape(b, hkv, spec * g_pad, e)
+
+    of = paged_verify_attention_flat(
+        qg, k_pages, v_pages, page_table, kv_lens, q_starts, spec=spec,
+        sm_scale=sm_scale, k_scales=k_scales, v_scales=v_scales,
+        interpret=interp,
+    )
+    of = of.reshape(b, hkv, spec, g_pad, e)[:, :, :, :group]
+    return of.transpose(0, 2, 1, 3, 4).reshape(b, spec, hq, e)
 
 
 @functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))

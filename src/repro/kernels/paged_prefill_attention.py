@@ -46,7 +46,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import NEG_INF
+from repro.kernels.common import NEG_INF, three_band_select
 
 
 def _paged_prefill_kernel(
@@ -87,17 +87,12 @@ def _paged_prefill_kernel(
             # indirection the index maps use (scalar-prefetch path)
             s = s * ks_ref[h // group, table_ref[j]]
 
-        def _masked(s):
-            rows = jax.lax.broadcasted_iota(
-                jnp.int32, (chunk, page_size), 0) + q0
-            cols = jax.lax.broadcasted_iota(
-                jnp.int32, (chunk, page_size), 1) + col0
-            keep = jnp.logical_and(cols <= rows, cols < kv_len)
-            return jnp.where(keep, s, NEG_INF)
-
         # Fully-visible pages skip the mask computation entirely; only
         # diagonal-straddling / kv_len-tail pages pay the VEC select.
-        s = jax.lax.cond(j >= n_full, _masked, lambda s: s, s)
+        s = jax.lax.cond(
+            j >= n_full,
+            lambda s: three_band_select(s, q0, col0, kv_len),
+            lambda s: s, s)
 
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))

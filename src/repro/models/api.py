@@ -22,6 +22,7 @@ class Model:
     make_cache: Callable[..., Any]    # cache_layout={"dense","paged"}
     # paged-KV serving path (block-table cache; continuous batching):
     paged_decode_step: Callable[..., Any] | None = None
+    paged_verify_step: Callable[..., Any] | None = None
     prefill_chunk: Callable[..., Any] | None = None
     write_prefill_pages: Callable[..., Any] | None = None
     encode: Callable[..., Any] | None = None
@@ -81,6 +82,7 @@ def build_model(cfg: ArchConfig) -> Model:
         decode_step=tfm.decode_step,
         make_cache=make_cache,
         paged_decode_step=tfm.paged_decode_step,
+        paged_verify_step=tfm.paged_verify_step,
         prefill_chunk=tfm.prefill_chunk,
         write_prefill_pages=lambda cache, dense, page_ids:
             tfm.write_prefill_pages(cfg, cache, dense, page_ids),

@@ -191,6 +191,63 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens, *,
     return (o / l).reshape(b, hq, e).astype(q.dtype)
 
 
+def paged_verify_attention(q, k_pages, v_pages, page_table, kv_lens,
+                           q_starts, *, impl="xla", k_scales=None,
+                           v_scales=None):
+    """k-token speculative verify over a block-table paged KV cache.
+
+    q: (B, k, Hq, E) — the k candidate positions per slot, whose K/V
+    rows are already in the pages; position i of slot b sits at absolute
+    position ``q_starts[b] + i``, and rows at or past ``kv_lens[b]``
+    (slots verifying fewer than k rows) return full-context garbage the
+    host discards (DESIGN.md §9). The pallas path
+    gathers pages through the prefetched page table; the XLA path
+    gathers the pool dense and applies the same fused causal-diagonal +
+    kv-tail mask and fp32 softmax, kept op-for-op identical so the
+    per-position greedy argmax agrees between backends — the property
+    the engine's accept rule relies on. Int8 pools apply the per-page
+    scales exactly where the kernel does (K on score columns, V folded
+    into P).
+    """
+    if impl == "pallas":
+        return kops.paged_verify_attention(q, k_pages, v_pages, page_table,
+                                           kv_lens, q_starts,
+                                           k_scales=k_scales,
+                                           v_scales=v_scales)
+    b, spec, hq, e = q.shape
+    hkv, _, page, _ = k_pages.shape
+    g = hq // hkv
+    k = jnp.moveaxis(k_pages[:, page_table], 0, 1).reshape(b, hkv, -1, e)
+    v = jnp.moveaxis(v_pages[:, page_table], 0, 1).reshape(b, hkv, -1, e)
+    s = k.shape[2]
+    # (B, Hkv, k, G, E): query heads grouped under their kv head, the
+    # speculative positions forming the short Q block.
+    qg = q.reshape(b, spec, hkv, g, e).transpose(0, 2, 1, 3, 4)
+    scale = e**-0.5
+    sc = jnp.einsum("bkpge,bkse->bkpgs", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+
+    def per_position(scales):
+        gathered = jnp.moveaxis(scales[:, page_table], 0, 1)
+        return jnp.repeat(gathered, page, axis=-1)
+
+    if k_scales is not None:
+        sc = sc * per_position(k_scales)[:, :, None, None, :]
+    rows = q_starts[:, None] + jnp.arange(spec)[None, :]         # (B, k)
+    cols = jnp.arange(s)[None, None, :]
+    mask = (cols <= rows[:, :, None]) & (cols < kv_lens[:, None, None])
+    sc = jnp.where(mask[:, None, :, None, :], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    if v_scales is not None:
+        p = p * per_position(v_scales)[:, :, None, None, :]
+    o = jnp.einsum("bkpgs,bkse->bkpge", p, v.astype(jnp.float32))
+    return ((o / l).transpose(0, 2, 1, 3, 4)
+            .reshape(b, spec, hq, e).astype(q.dtype))
+
+
 def paged_prefill_attention(q, k_pages, v_pages, page_table, q_offset,
                             kv_len, *, impl="xla", k_scales=None,
                             v_scales=None):

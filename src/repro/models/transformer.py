@@ -204,6 +204,60 @@ def _paged_append_requant(pages, scales, page_ids, slots, row):
     return pages.at[:, page_ids].set(q), scales.at[:, page_ids].set(new_sc)
 
 
+def _paged_append_n(pages, scales, table, positions, rows, n_valid, *, spec):
+    """Append up to ``spec`` candidate rows per sequence in ONE pass (§9).
+
+    pages: (Hkv, P, page, E); scales: (Hkv, P) fp32 or None (fp32 pool);
+    table: (B, max_pages); positions: (B,) absolute position of each
+    sequence's FIRST candidate row; rows: (Hkv, B, k, E) at compute
+    precision; n_valid: (B,) rows actually landing per sequence (slots
+    near their token budget, or idle with 0, verify fewer than k — the
+    surplus candidate rows are zeroed out of the write so they touch no
+    page past the allocation point). The valid window may straddle a
+    page boundary, so the touched span (at most ``t_max`` pages, all
+    pre-allocated by the engine's ``ensure_capacity``) is gathered
+    whole, the candidates inserted at their in-window offsets, and —
+    for int8 pools — every touched page requantized under ONE fresh
+    symmetric absmax: the §5 requant invariant (live rows only; stale
+    bytes masked out of absmax and rewrite) generalized from one row to
+    k. Inactive window slots (a window shorter than t_max pages) park
+    on the pool's reserved scratch page 0, whose bytes are never read
+    live.
+    """
+    hkv, _, page, e = pages.shape
+    bsz = rows.shape[1]
+    t_max = (page - 1 + spec - 1) // page + 1
+    p0 = positions // page
+    p_last = (positions + n_valid - 1) // page       # -1 when n_valid == 0
+    off0 = positions % page
+    lp = p0[:, None] + jnp.arange(t_max)[None, :]          # (B, t_max)
+    active = lp <= p_last[:, None]
+    ids = jnp.where(
+        active,
+        jnp.take_along_axis(table,
+                            jnp.clip(lp, 0, table.shape[1] - 1), axis=1),
+        0,
+    )
+    quantized = scales is not None
+    win = pages[:, ids].astype(jnp.float32)          # (Hkv, B, t_max, pg, E)
+    if quantized:
+        win = win * scales[:, ids][..., None, None]
+    win = win.reshape(hkv, bsz, t_max * page, e)
+    flat = jnp.arange(t_max * page)[None, :]
+    live = flat < off0[:, None]                      # pre-window live rows
+    win = jnp.where(live[None, :, :, None], win, 0.0)
+    idx = off0[:, None] + jnp.arange(spec)[None, :]  # (B, k) window offsets
+    win = win.at[:, jnp.arange(bsz)[:, None], idx].set(
+        rows.astype(jnp.float32))
+    keep = flat < (off0 + n_valid)[:, None]          # drop surplus rows
+    win = jnp.where(keep[None, :, :, None], win, 0.0)
+    win = win.reshape(hkv, bsz, t_max, page, e)
+    if not quantized:
+        return pages.at[:, ids].set(win.astype(pages.dtype)), None
+    qv, new_sc = quantize_q8(win, (-2, -1))
+    return pages.at[:, ids].set(qv), scales.at[:, ids].set(new_sc)
+
+
 def attn_paged_decode(params, x, cfg: ArchConfig, *, k_pages, v_pages,
                       page_table, positions, k_scales=None, v_scales=None):
     """One-token self-attention against a paged (block-table) cache.
@@ -242,6 +296,46 @@ def attn_paged_decode(params, x, cfg: ArchConfig, *, k_pages, v_pages,
         updates.update(k_scale=k_scales, v_scale=v_scales)
     return (o.reshape(b, 1, -1) @ params["wo"].astype(x.dtype),
             updates)
+
+
+def attn_paged_verify(params, x, cfg: ArchConfig, *, k_pages, v_pages,
+                      page_table, positions, n_rows, k_scales=None,
+                      v_scales=None):
+    """k-token speculative-verify self-attention on a paged cache (§9).
+
+    x: (B, k, D) — the last emitted token plus up to k-1 drafted ones
+    per slot, rows at absolute positions ``positions[b] + i``; pools:
+    (Hkv, P, page, E); page_table: (B, max_pages); n_rows: (B,) valid
+    candidate rows per slot (< k for slots near their token budget; 0
+    for idle slots). The valid candidate K/V rows are written first
+    (one batched, requant-safe pass — the pages were pre-allocated by
+    the scheduler), then the k-row Q block attends through the
+    page-table gather with ``kv_len = positions + n_rows``; Q rows past
+    ``n_rows`` return garbage the engine discards. Rows of rejected
+    candidates stay in the pool as stale bytes: future kv_lens stop
+    before them and the §5 requant live-masks skip them, exactly like
+    reused-page garbage. Returns (out (B, k, D), pool updates dict).
+    """
+    b, k = x.shape[0], x.shape[1]
+    pos_bk = positions[:, None] + jnp.arange(k)[None, :]
+    q, kk, vv = _qkv(params, x, cfg, positions=pos_bk[:, None, :])
+    k_rows = kk.transpose(1, 0, 2, 3)   # (Hkv, B, k, E)
+    v_rows = vv.transpose(1, 0, 2, 3)
+    quantized = k_pages.dtype == jnp.int8
+    k_pages, k_scales = _paged_append_n(k_pages, k_scales, page_table,
+                                        positions, k_rows, n_rows, spec=k)
+    v_pages, v_scales = _paged_append_n(v_pages, v_scales, page_table,
+                                        positions, v_rows, n_rows, spec=k)
+    o = attn_mod.paged_verify_attention(
+        q.transpose(0, 2, 1, 3), k_pages, v_pages, page_table,
+        positions + n_rows, positions,
+        impl="pallas" if cfg.attn_impl == "pallas" else "xla",
+        k_scales=k_scales, v_scales=v_scales,
+    )
+    updates = {"k": k_pages, "v": v_pages}
+    if quantized:
+        updates.update(k_scale=k_scales, v_scale=v_scales)
+    return (o.reshape(b, k, -1) @ params["wo"].astype(x.dtype), updates)
 
 
 def attn_paged_prefill(params, x, cfg: ArchConfig, *, k_pages, v_pages,
@@ -717,6 +811,45 @@ def paged_decode_step(params, cfg: ArchConfig, token, cache, page_table,
         y, pool_updates = attn_paged_decode(
             p["attn"], x, cfg, k_pages=c["k"], v_pages=c["v"],
             page_table=page_table, positions=positions,
+            k_scales=c.get("k_scale"), v_scales=c.get("v_scale"),
+        )
+        x = x + y
+        if cfg.moe is not None:
+            y, _ = moe_ffn(p["ffn"], x, cfg)
+        else:
+            y = mlp(p["ffn"], x, cfg)
+        return x + y, {"b0": dict(c, **pool_updates)}
+
+    x, new_units = jax.lax.scan(unit_body, x,
+                                (params["units"], cache["units"]))
+    return _unembed(params, x, cfg), {"units": new_units}
+
+
+def paged_verify_step(params, cfg: ArchConfig, tokens, cache, page_table,
+                      positions, n_rows):
+    """Speculative verify step (DESIGN.md §9).
+
+    tokens: (B, k) int32 — column 0 is each slot's last emitted token,
+    columns 1..k-1 the drafted candidates; page_table: (B, max_pages);
+    positions: (B,) absolute position of column 0 (== pre-step kv_len);
+    n_rows: (B,) valid candidate rows per slot (1 + drafts actually
+    used; 0 for idle slots — columns past ``n_rows`` are neither
+    written to the pool nor meaningfully attended).
+    Returns (logits (B, k, V), cache): logits[:, i] conditions on
+    everything through candidate i, so ``argmax(logits[:, i-1])`` is the
+    exact greedy token at the drafted position i — the host accepts the
+    longest matching prefix plus one bonus token. k == 1 is
+    op-equivalent to ``paged_decode_step``.
+    """
+    _check_paged_support(cfg)
+    x = _embed(params, tokens, cfg)
+
+    def unit_body(x, xs):
+        p_unit, c_unit = xs
+        p, c = p_unit["b0"], c_unit["b0"]
+        y, pool_updates = attn_paged_verify(
+            p["attn"], x, cfg, k_pages=c["k"], v_pages=c["v"],
+            page_table=page_table, positions=positions, n_rows=n_rows,
             k_scales=c.get("k_scale"), v_scales=c.get("v_scale"),
         )
         x = x + y

@@ -31,12 +31,15 @@ __all__ = [
 # engine step kinds -> compare phases. A "chunk+decode" step carries a
 # prompt chunk AND the live decode slots — exactly what the sim's
 # chunked-prefill schedule charges per chunk (interleaved decode step
-# included), so both chunk kinds land in the prefill_chunk phase.
+# included), so both chunk kinds land in the prefill_chunk phase. A
+# "verify" step is the speculative engine's multi-token dispatch
+# (DESIGN.md §9), priced by the sim's speculative-decode schedule.
 DEFAULT_KIND_TO_PHASE = {
     "decode": "decode",
     "chunk": "prefill_chunk",
     "chunk+decode": "prefill_chunk",
     "wave_decode": "decode",
+    "verify": "verify",
 }
 
 

@@ -1,3 +1,4 @@
+from repro.serving.drafter import NgramDrafter
 from repro.serving.engine import (
     ContinuousBatchingEngine,
     Request,
@@ -28,6 +29,7 @@ from repro.serving.paged_cache import (
 __all__ = [
     "ServingEngine",
     "ContinuousBatchingEngine",
+    "NgramDrafter",
     "Request",
     "RequestRecord",
     "RequestState",

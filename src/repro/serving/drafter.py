@@ -1,0 +1,61 @@
+"""Prompt-lookup n-gram drafter for speculative decoding (DESIGN.md §9).
+
+The cheapest useful draft model is no model at all: natural prompts —
+summarization, extraction, code edits, chat with quoting — repeat long
+spans of their own context verbatim, so the tokens that FOLLOWED the
+most recent earlier occurrence of the current suffix are a strong guess
+for what comes next. This is the "prompt lookup decoding" trick: a pure
+host-side string match, zero extra device work, and deterministic — the
+same context always yields the same draft, which keeps speculative
+serving bit-reproducible and lets the parity tests assert token-for-
+token equality against the non-speculative engine.
+
+The drafter never affects correctness: drafted tokens are only
+*candidates* the verify step checks against the model's own greedy
+argmax (``engine.ContinuousBatchingEngine``'s accept rule). A bad draft
+just wastes the slot's verify rows for that step; the adaptive-k
+throttle then shrinks how many drafts the slot requests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class NgramDrafter:
+    """Longest-suffix prompt-lookup drafter.
+
+    For a context (prompt + tokens generated so far, ending in the last
+    emitted token), find the longest suffix of length <= ``ngram`` that
+    also occurs earlier in the context; among equal-length matches take
+    the MOST RECENT earlier occurrence (recency beats frequency for
+    repetitive structure); propose up to ``k`` tokens that followed it.
+    Returns fewer than ``k`` — possibly none — when the match's
+    continuation runs out or no suffix recurs.
+    """
+
+    def __init__(self, *, ngram: int = 3):
+        if ngram < 1:
+            raise ValueError(f"ngram must be >= 1, got {ngram}")
+        self.ngram = ngram
+
+    def draft(self, context, k: int) -> list[int]:
+        """Propose up to ``k`` continuation tokens for ``context``."""
+        ctx = np.asarray(context, dtype=np.int64)
+        n = ctx.shape[0]
+        if k <= 0 or n < 2:
+            return []
+        for g in range(min(self.ngram, n - 1), 0, -1):
+            pat = ctx[n - g:]
+            # Candidate start positions i < n - g (the suffix itself is
+            # excluded); vectorized windowed compare.
+            windows = np.lib.stride_tricks.sliding_window_view(
+                ctx[:n - 1], g)                      # starts 0 .. n-1-g
+            hits = np.nonzero((windows == pat).all(axis=1))[0]
+            hits = hits[hits < n - g]
+            if hits.size:
+                i = int(hits[-1])                    # most recent
+                cont = ctx[i + g:i + g + k]
+                if cont.size:
+                    return [int(t) for t in cont]
+        return []

@@ -53,10 +53,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.autotune import tune_pool_headroom, tune_prefill_chunk
+from repro.core.autotune import (
+    tune_pool_headroom,
+    tune_prefill_chunk,
+    tune_spec_depth,
+)
 from repro.models.api import Model
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NULL_TRACER
+from repro.serving.drafter import NgramDrafter
 from repro.serving.faults import NO_FAULTS
 from repro.serving.lifecycle import (
     Request,
@@ -355,6 +360,20 @@ class ContinuousBatchingEngine:
     headroom); the default is the analytical
     ``core/autotune.tune_pool_headroom`` when overcommitted, 0 when
     fully reserved.
+
+    ``spec_depth`` switches pure-decode steps to speculative decoding
+    (DESIGN.md §9): a host-side prompt-lookup drafter proposes up to
+    k-1 continuation tokens per live slot, ONE batched verify dispatch
+    scores all candidate positions against the paged pool, and the
+    engine accepts each slot's longest greedy-matching draft prefix
+    plus one bonus token — >= 1 token per step, token-for-token
+    identical to plain greedy decode. ``spec_depth="auto"`` takes the
+    analytical ``core/autotune.tune_spec_depth`` default; per-request
+    acceptance EMAs adaptively throttle how many drafts each slot
+    requests (the dispatch shape stays at the static k). Chunked
+    prefill admission is unchanged — mixed chunk+decode steps decode
+    one token, so speculation never adds a compile shape to the
+    admission path.
     """
 
     def __init__(self, model: Model, params, *, max_len: int = 512,
@@ -363,7 +382,9 @@ class ContinuousBatchingEngine:
                  chunk_size: int | None = None,
                  decode_reserve_frac: float = 1.0,
                  headroom_pages: int | None = None,
-                 max_preemptions: int = 32, tracer=None):
+                 max_preemptions: int = 32, tracer=None,
+                 spec_depth: int | str | None = None,
+                 spec_ngram: int = 3):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -406,6 +427,17 @@ class ContinuousBatchingEngine:
                 if self.decode_reserve_frac < 1.0 else 0)
         self.headroom_pages = headroom_pages
         self.max_preemptions = max_preemptions
+        if spec_depth == "auto":
+            spec_depth = tune_spec_depth(
+                b_h=self.cfg.num_heads, n_ctx=max_len, e=self.cfg.hd,
+                itemsize=jnp.dtype(self.cfg.compute_dtype).itemsize,
+                page=page_size, kv_itemsize=self.kv_dtype.itemsize,
+            )
+        if spec_depth is not None and spec_depth < 1:
+            raise ValueError(f"spec_depth must be >= 1, got {spec_depth}")
+        self.spec_depth = spec_depth
+        self._drafter = (NgramDrafter(ngram=spec_ngram)
+                         if spec_depth is not None else None)
         self.peak_pages_used = 0  # across serve() calls, for benchmarks
         # per-step scheduler trace of the LAST serve() call: whether a
         # prompt chunk was packed and how many decode slots were live
@@ -492,6 +524,32 @@ class ContinuousBatchingEngine:
         self._chunk_step = jax.jit(chunk_step)
         self._chunk_only = jax.jit(chunk_only)
 
+        self._verify = None
+        if self.spec_depth is not None:
+            K = int(self.spec_depth)
+
+            def unpack_vs(vs):
+                # tokens (B, k) | positions (B,) | n_rows (B,) | table
+                return (vs[:B_ * K].reshape(B_, K),
+                        vs[B_ * K + 2 * B_:].reshape(B_, MP),
+                        vs[B_ * K:B_ * K + B_],
+                        vs[B_ * K + B_:B_ * K + 2 * B_])
+
+            def verify_step(p, c, vs):
+                # one dispatch verifies every live slot's draft block;
+                # the k per-position argmaxes and k finite-guard flags
+                # per slot ride the step's single host transfer
+                t, table, pos, nrows = unpack_vs(vs)
+                logits, c = model.paged_verify_step(p, model.cfg, t, c,
+                                                    table, pos, nrows)
+                return jnp.concatenate([
+                    jnp.argmax(logits, axis=-1).astype(jnp.int32).ravel(),
+                    _finite_rows(logits.reshape(B_ * K, -1))
+                    .astype(jnp.int32),
+                ]), c
+
+            self._verify = jax.jit(verify_step)
+
     def kv_bytes_per_page(self) -> int:
         cfg = self.cfg
         return page_footprint_bytes(
@@ -526,6 +584,16 @@ class ContinuousBatchingEngine:
         return int(
             self.metrics.counter("serving.recompute_tokens").value)
 
+    @property
+    def spec_stats(self) -> dict:
+        """Speculation summary of the last serve() call: drafted /
+        accepted totals and the overall acceptance rate (DESIGN.md §9).
+        All zeros when speculation is off."""
+        drafted = int(self.metrics.counter("spec.tokens_drafted").value)
+        accepted = int(self.metrics.counter("spec.tokens_accepted").value)
+        return {"drafted": drafted, "accepted": accepted,
+                "acceptance_rate": accepted / drafted if drafted else 0.0}
+
     def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
         B, ps = self.batch_size, self.page_size
         mgr = PagedKVCacheManager(self.num_pages, ps, num_slots=B,
@@ -552,11 +620,26 @@ class ContinuousBatchingEngine:
         m_tokens = m.counter("serving.tokens_generated")
         m_sync = m.histogram("engine.host_sync_s",
                              "device->host transfer wait per step")
+        # "verify" only when speculation is on — a non-speculative serve
+        # must not export an empty verify histogram (CI's metrics
+        # cross-check treats empty step histograms as a pipeline bug)
+        step_kinds = ("decode", "chunk", "chunk+decode") + (
+            ("verify",) if self.spec_depth is not None else ())
         m_step_kind = {
             k: m.histogram(f"engine.step_s.{k}",
                            "step walltime (pack+dispatch+sync) by kind")
-            for k in ("decode", "chunk", "chunk+decode")
+            for k in step_kinds
         }
+        # speculative decoding telemetry (DESIGN.md §9): global draft /
+        # accept counters plus the per-request acceptance-rate series
+        # the adaptive-k throttle is driven by
+        m_drafted = m.counter("spec.tokens_drafted",
+                              "draft candidates sent to verify steps")
+        m_accepted = m.counter("spec.tokens_accepted",
+                               "draft candidates matching greedy argmax")
+        m_accept_rate = m.series("spec.acceptance_rate",
+                                 "per-verify-step draft acceptance by rid")
+        spec_state: dict[int, dict] = {}  # rid -> {"ema", "k"}
         tr = self.tracer
         tracing = tr.enabled
         self.serve_t0 = time.perf_counter()
@@ -623,6 +706,51 @@ class ContinuousBatchingEngine:
                     return True
                 except PagePoolExhausted:
                     continue
+
+        def plan_speculation():
+            """Draft + page reservation for one verify step (§9).
+
+            For every live slot: pick how many candidate rows to verify
+            — the adaptive per-request k, capped by the slot's remaining
+            token budget so the reservation can never outgrow
+            ``max_pages_per_seq`` — draft via prompt lookup, and
+            pre-allocate the pages the candidate rows land in (the
+            device writes them, so the table must name them BEFORE
+            dispatch). Reservation exhaustion preempts the youngest
+            live request, possibly the reserving slot itself.
+            """
+            K = int(self.spec_depth)
+            vs_tokens = np.zeros((B, K), np.int32)
+            n_rows = np.zeros((B,), np.int32)
+            drafts: dict[int, list[int]] = {}
+            for slot_i in list(active):
+                if slot_i not in active:
+                    continue  # evicted by an earlier slot's reservation
+                rec_i = active[slot_i]
+                st = spec_state.setdefault(rec_i.rid, {"ema": 1.0, "k": K})
+                want = min(st["k"], rec_i.remaining, K)
+                d = self._drafter.draft(
+                    np.concatenate([
+                        np.asarray(rec_i.request.prompt, np.int64),
+                        np.asarray(rec_i.tokens, np.int64)]),
+                    want - 1) if want > 1 else []
+                nr = 1 + len(d)
+                while slot_i in active:
+                    try:
+                        mgr.ensure_capacity(slot_i, nr)
+                        break
+                    except PagePoolExhausted:
+                        victim = max(active,
+                                     key=lambda s: active[s].admit_seq)
+                        preempt(victim)
+                if slot_i not in active:
+                    continue  # the reserving slot was the victim
+                drafts[slot_i] = d
+                vs_tokens[slot_i, 0] = tokens[slot_i, 0]
+                if d:
+                    vs_tokens[slot_i, 1:1 + len(d)] = d
+                n_rows[slot_i] = nr
+            return vs_tokens, n_rows, drafts
 
         has_deadlines = any(r.deadline_s is not None for r in requests)
 
@@ -725,14 +853,29 @@ class ContinuousBatchingEngine:
                 step_idx += 1
                 continue
             stalls = 0
+            spec_plan = None
+            t_step0 = time.perf_counter()
+            t_draft1 = t_step0
+            if pending is None and self._verify is not None:
+                # speculative decode step: draft + reserve BEFORE the
+                # table snapshot, so reservation pages (and any
+                # reservation-driven preemption) are visible to it
+                spec_plan = plan_speculation()
+                t_draft1 = time.perf_counter()
+                if tracing:
+                    tr.complete("draft", tr.to_us(t_step0),
+                                (t_draft1 - t_step0) * 1e6, track="engine")
+                if not active:
+                    step_idx += 1
+                    continue  # reservation churn evicted every slot
             m_occ.record(mgr.pages_used)
             self.step_log.append({"prefill_in_flight": pending is not None,
                                   "live_decode": len(active)})
-            kind = ("decode" if pending is None
+            kind = (("verify" if spec_plan is not None else "decode")
+                    if pending is None
                     else ("chunk+decode" if active else "chunk"))
             if tracing:
                 tr.counter("pool.pages_used", mgr.pages_used, track="pool")
-            t_step0 = time.perf_counter()
             dec_table = mgr.table()
             if pending is not None:
                 rec, slot, q0, rprompt = pending
@@ -763,6 +906,12 @@ class ContinuousBatchingEngine:
                         self.params, cache, jnp.asarray(hs), ch)
                 else:
                     packed, cache = self._chunk_only(self.params, cache, ch)
+            elif spec_plan is not None:
+                vs_tokens, n_rows, _ = spec_plan
+                vs = np.concatenate([vs_tokens.ravel(), positions,
+                                     n_rows, dec_table.ravel()])
+                packed, cache = self._verify(self.params, cache,
+                                             jnp.asarray(vs))
             else:
                 hs = np.concatenate([tokens[:, 0], positions,
                                      dec_table.ravel()])
@@ -792,48 +941,139 @@ class ContinuousBatchingEngine:
                             (t_disp - t_step0) * 1e6, track="engine")
                 tr.complete("host_sync", tr.to_us(t_disp),
                             (now - t_disp) * 1e6, track="engine")
+                if spec_plan is not None:
+                    # draft/verify split inside the step span: drafting
+                    # ended at t_draft1, the verify kernel's dispatch +
+                    # sync fills the rest
+                    tr.complete("verify", tr.to_us(t_draft1),
+                                (now - t_draft1) * 1e6, track="engine")
             half = raw.shape[0] // 2
             token_host = raw[:half]
             ok_host = np.asarray(
                 self.injector.corrupt_step_ok(step_idx,
                                               raw[half:].astype(bool)))
-            for slot_i in list(active.keys()):
-                if slot_i not in active:
-                    continue  # preempted by an earlier slot's recovery
-                rec_i = active[slot_i]
-                if not ok_host[slot_i]:
-                    # NaN/inf isolation: fail THIS slot, free its pages,
-                    # let the rest of the batch decode on
-                    rec_i.fail("non-finite logits")
-                    m_nan.inc()
-                    del active[slot_i]
-                    retire(slot_i)
-                    continue
-                t = int(token_host[slot_i])
-                rec_i.tokens.append(t)
-                m_walltimes.observe(rec_i.rid, now)
-                m_tokens.inc()
-                positions[slot_i] += 1
-                try:
-                    if self.injector.alloc_fault(step_idx, n_append,
-                                                 slot_i):
-                        raise PagePoolExhausted(
-                            f"injected exhaustion at append {n_append}")
-                    mgr.append(slot_i)
-                except PagePoolExhausted:
-                    if not recover_exhaustion(slot_i):
+            if spec_plan is not None:
+                # accept rule (§9): per slot, take the longest prefix of
+                # drafts matching the model's own greedy argmax, plus
+                # ONE bonus token — logits at position i condition on
+                # candidates 0..i, so the match guarantees the emitted
+                # stream is token-for-token the plain greedy one.
+                K = int(self.spec_depth)
+                vs_tokens, n_rows, drafts = spec_plan
+                am = token_host.reshape(B, K)
+                okm = ok_host.reshape(B, K)
+                step_drafted = step_accepted = 0
+                for slot_i in list(active.keys()):
+                    if slot_i not in active:
+                        continue  # preempted by an earlier slot's fault
+                    rec_i = active[slot_i]
+                    nr = int(n_rows[slot_i])
+                    if not okm[slot_i, :nr].all():
+                        rec_i.fail("non-finite logits")
+                        m_nan.inc()
+                        del active[slot_i]
+                        retire(slot_i)
+                        continue
+                    d = drafts.get(slot_i, [])
+                    a = 0
+                    while a < len(d) and int(am[slot_i, a]) == d[a]:
+                        a += 1
+                    emit = [int(t) for t in d[:a]] + [int(am[slot_i, a])]
+                    if d:
+                        st = spec_state[rec_i.rid]
+                        rate = a / len(d)
+                        # EMA-driven adaptive k: a slot whose drafts
+                        # keep missing stops paying for dead verify rows
+                        st["ema"] = 0.5 * st["ema"] + 0.5 * rate
+                        st["k"] = 1 + int(round(st["ema"] * (K - 1)))
+                        m_drafted.inc(len(d))
+                        m_accepted.inc(a)
+                        m_accept_rate.observe(rec_i.rid, rate)
+                        step_drafted += len(d)
+                        step_accepted += a
+                    emit = emit[:rec_i.remaining]
+                    kept = 0
+                    fin = False
+                    for t in emit:
+                        rec_i.tokens.append(t)
+                        m_walltimes.observe(rec_i.rid, now)
+                        m_tokens.inc()
+                        kept += 1
+                        if (t == rec_i.request.eos_id
+                                or rec_i.remaining <= 0):
+                            fin = True
+                            break
+                    # capacity was reserved pre-dispatch, so the commit
+                    # cannot exhaust the pool organically — only the
+                    # injected per-append faults fire, swept at the same
+                    # global ``n_append`` granularity as plain decode
+                    evicted = False
+                    for _ in range(kept):
+                        if self.injector.alloc_fault(step_idx, n_append,
+                                                     slot_i):
+                            victim = max(
+                                active,
+                                key=lambda s: active[s].admit_seq)
+                            preempt(victim)
+                            if victim == slot_i:
+                                evicted = True
+                                n_append += 1
+                                break
                         n_append += 1
-                        continue  # requester itself was preempted
-                finally:
+                    if evicted:
+                        continue  # emitted tokens survive on the record
+                    mgr.append_n(slot_i, kept)  # ONE page-table commit
+                    positions[slot_i] += kept
                     self.peak_pages_used = max(self.peak_pages_used,
                                                mgr.peak_pages_used)
-                n_append += 1
-                if t == rec_i.request.eos_id or rec_i.remaining <= 0:
-                    rec_i.finish()
-                    del active[slot_i]
-                    retire(slot_i)
-                else:
-                    tokens[slot_i, 0] = t
+                    if fin:
+                        rec_i.finish()
+                        del active[slot_i]
+                        retire(slot_i)
+                    else:
+                        tokens[slot_i, 0] = emit[kept - 1]
+                if tracing:
+                    tr.instant("speculation", track="engine",
+                               args={"drafted": step_drafted,
+                                     "accepted": step_accepted})
+            else:
+                for slot_i in list(active.keys()):
+                    if slot_i not in active:
+                        continue  # preempted by an earlier slot's recovery
+                    rec_i = active[slot_i]
+                    if not ok_host[slot_i]:
+                        # NaN/inf isolation: fail THIS slot, free its
+                        # pages, let the rest of the batch decode on
+                        rec_i.fail("non-finite logits")
+                        m_nan.inc()
+                        del active[slot_i]
+                        retire(slot_i)
+                        continue
+                    t = int(token_host[slot_i])
+                    rec_i.tokens.append(t)
+                    m_walltimes.observe(rec_i.rid, now)
+                    m_tokens.inc()
+                    positions[slot_i] += 1
+                    try:
+                        if self.injector.alloc_fault(step_idx, n_append,
+                                                     slot_i):
+                            raise PagePoolExhausted(
+                                f"injected exhaustion at append {n_append}")
+                        mgr.append(slot_i)
+                    except PagePoolExhausted:
+                        if not recover_exhaustion(slot_i):
+                            n_append += 1
+                            continue  # requester itself was preempted
+                    finally:
+                        self.peak_pages_used = max(self.peak_pages_used,
+                                                   mgr.peak_pages_used)
+                    n_append += 1
+                    if t == rec_i.request.eos_id or rec_i.remaining <= 0:
+                        rec_i.finish()
+                        del active[slot_i]
+                        retire(slot_i)
+                    else:
+                        tokens[slot_i, 0] = t
             if pending is not None:
                 q0 += clen
                 if q0 >= plen:  # prefill complete: first token is out

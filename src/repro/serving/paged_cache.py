@@ -210,6 +210,45 @@ class PagedKVCacheManager:
             seq.pages.extend(self.alloc(1, slot=slot))
         seq.length += 1
 
+    def ensure_capacity(self, slot: int, n: int) -> None:
+        """Pre-allocate pages so ``n`` more tokens can land without any
+        further allocation — the reservation a speculative verify step
+        takes BEFORE dispatching (DESIGN.md §9), since the device writes
+        candidate rows into pages the table must already name. Does not
+        change the sequence length; a following ``append_n`` of up to
+        ``n`` tokens is then alloc-free, and un-used pages stay owned
+        like admission reserve pages. Exception-safe like ``append``:
+        on ``PagePoolExhausted`` the sequence is unchanged."""
+        seq = self._seqs[slot]
+        need = self.pages_needed(seq.length + n) - seq.capacity
+        if need > 0:
+            if seq.capacity + need > self.max_pages_per_seq:
+                raise PagePoolExhausted(
+                    f"slot {slot} exceeded max_pages_per_seq"
+                )
+            seq.pages.extend(self.alloc(need, slot=slot))
+
+    def append_n(self, slot: int, n: int) -> None:
+        """Record ``n`` generated tokens in ONE page-table update — the
+        accept path of a speculative verify step (DESIGN.md §9), where
+        the whole accepted prefix lands at once instead of via n serial
+        ``append`` calls. Any pages the n-token window grows into are
+        taken with a single all-or-nothing ``alloc``, so the
+        exception-safety contract matches ``append``: on
+        ``PagePoolExhausted`` the sequence (length AND capacity) is
+        unchanged and the scheduler can preempt a victim and retry."""
+        if n == 0:
+            return
+        seq = self._seqs[slot]
+        need = self.pages_needed(seq.length + n) - seq.capacity
+        if need > 0:
+            if seq.capacity + need > self.max_pages_per_seq:
+                raise PagePoolExhausted(
+                    f"slot {slot} exceeded max_pages_per_seq"
+                )
+            seq.pages.extend(self.alloc(need, slot=slot))
+        seq.length += n
+
     def seq_pages(self, slot: int) -> list[int]:
         """Physical page ids owned by ``slot`` (prompt-order)."""
         return list(self._seqs[slot].pages)

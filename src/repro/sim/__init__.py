@@ -12,6 +12,7 @@ from repro.sim.workload import (
     AttentionWorkload,
     ChunkedPrefillWorkload,
     PagedDecodeWorkload,
+    SpeculativeDecodeWorkload,
     PAPER_NETWORKS,
 )
 from repro.sim.engine import simulate, SimResult
@@ -20,6 +21,7 @@ from repro.sim.search import search_tiling
 
 __all__ = [
     "EDGE_HW", "HWConfig", "AttentionWorkload", "ChunkedPrefillWorkload",
-    "PagedDecodeWorkload", "PAPER_NETWORKS", "simulate", "SimResult",
-    "METHODS", "build_schedule", "Tiling", "search_tiling",
+    "PagedDecodeWorkload", "SpeculativeDecodeWorkload", "PAPER_NETWORKS",
+    "simulate", "SimResult", "METHODS", "build_schedule", "Tiling",
+    "search_tiling",
 ]

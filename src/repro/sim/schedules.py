@@ -21,6 +21,7 @@ from repro.sim.workload import (
     AttentionWorkload,
     ChunkedPrefillWorkload,
     PagedDecodeWorkload,
+    SpeculativeDecodeWorkload,
 )
 
 METHODS = ("layerwise", "softpipe", "flat", "tileflow", "fusemax", "mas")
@@ -40,6 +41,11 @@ class Tiling:
     # ChunkedPrefillWorkload next to kv_bpe (grid/MCTS/GA genomes carry
     # it as a fifth gene).
     chunk: int | None = None
+    # Speculation depth — candidate rows per verify step (DESIGN.md §9).
+    # None -> workload pin or plain decode (k=1); searched for
+    # SpeculativeDecodeWorkload as the SIXTH gene: fewer serial steps
+    # vs. fatter MXU/VEC tiles, with the page DMA charged once either way.
+    spec: int | None = None
 
 
 def _effective_kv_bpe(w, t: Tiling, hw: HWConfig) -> int:
@@ -620,6 +626,120 @@ def build_paged_decode(w, t, hw) -> list[Task] | None:
 
 
 # ---------------------------------------------------------------------------
+# Speculative decode: verify steps of k candidate rows, serial until the
+# token goal is met; step count scales with the expected acceptance.
+# ---------------------------------------------------------------------------
+
+
+def build_speculative_decode(w, t, hw) -> list[Task] | None:
+    """Task graph for a speculative generation (SpeculativeDecodeWorkload).
+
+    ``t.spec`` is the SPECULATION DEPTH — the sixth searchable factor
+    (DESIGN.md §9; falls back to the workload pin, then k=1) — ``t.nkv``
+    the page size, ``t.hh`` the kv-head tile, ``t.kv_bpe`` the KV
+    element width; ``t.nq``/``t.chunk`` are ignored. The schedule emits
+    ``w.n_steps(spec)`` SERIAL verify steps (the engine's jitted
+    dispatch barrier): per step and sequence the page-granular KV DMA is
+    charged ONCE — candidate rows ride the same gather — while the QK^T
+    and PV MACs carry (group * spec) rows and the VEC partial softmax
+    covers spec score rows per query head, plus the three-band in-tile
+    causal select on the diagonal-straddling pages (the k-block tail)
+    and the int8 dequant passes when quantized. Depth therefore buys
+    fewer steps (fewer page walks, fewer step barriers) at fatter
+    per-step MXU/VEC tiles — the trade the search resolves. Host-side
+    drafting (``serving.drafter``) is free.
+    """
+    page = min(t.nkv, w.seq)
+    spec = t.spec or w.spec or 1
+    heads_core = -(-w.heads // hw.cores)
+    hh = min(t.hh, heads_core)
+    bpe = hw.bytes_per_elem
+    kv_bpe = _effective_kv_bpe(w, t, hw)
+    kv_quant = kv_bpe < bpe
+    g, e = w.group, w.emb
+    rows_t = g * spec              # MXU row dim per kv head
+    # L1: Q + O (spec rows each) + double-buffered K/V pages + score tile
+    need = (hh * (2 * rows_t * e + 2 * rows_t * page) * bpe
+            + hh * 4 * page * e * kv_bpe)
+    if need > hw.l1_bytes:
+        return None
+
+    dma_bpc = hw.dram_bytes_per_cycle / hw.cores
+    tasks: list[Task] = []
+
+    def emit(**kw) -> int:
+        tasks.append(Task(**kw))
+        return len(tasks) - 1
+
+    def dma_page(nbytes, deps=(), tag=""):
+        return emit(unit="DMA",
+                    cycles=hw.dma_page_setup_cycles + nbytes / dma_bpc,
+                    deps=tuple(deps), tag=tag, dram_read_bytes=nbytes,
+                    l1_bytes=nbytes)
+
+    page_b = hh * page * e * kv_bpe + (hh * 4 if kv_quant else 0)
+    q_b = hh * rows_t * e * bpe
+    r = hh * rows_t                # VEC softmax rows per core
+
+    prev_step: tuple[int, ...] = ()
+    for st in range(w.n_steps(spec)):
+        step_sinks: list[int] = []
+        for s, kv_len in enumerate(w.kv_lens):
+            n_pages = -(-kv_len // page)
+            # diagonal-straddling pages: those covering the k candidate
+            # positions [kv_len - spec, kv_len) pay the in-tile causal
+            # select on the VEC stream (kernels/common.three_band_select)
+            n_full = max(0, min(n_pages, (kv_len - spec) // page))
+            for ht in range(-(-heads_core // hh)):
+                qd = emit(unit="DMA", cycles=q_b / dma_bpc, deps=prev_step,
+                          tag=f"Q{st}.{s}.{ht}", dram_read_bytes=q_b,
+                          l1_bytes=q_b)
+                prev_acc = None
+                for j in range(n_pages):
+                    kd = dma_page(page_b, deps=prev_step,
+                                  tag=f"K{st}.{s}.{ht}.{j}")
+                    sj = emit(unit="MAC",
+                              cycles=hh * hw.mac_cycles(rows_t, e, page),
+                              deps=(qd, kd), tag=f"S{st}.{s}.{ht}.{j}",
+                              mac_ops=hh * rows_t * page * e,
+                              l1_bytes=(rows_t * e + page * e
+                                        + rows_t * page) * hh * bpe)
+                    # partial softmax + running (m, l) + acc rescale
+                    cyc = hw.vec_softmax_cycles(r, page) + r * (
+                        2 * hw.vec_ew_cost + e / hw.vec_lanes * 2
+                    )
+                    ops = hw.vec_ops_softmax(r, page) + 2 * r * e
+                    if j >= n_full:
+                        # three-band diagonal tile: compare+select pass
+                        cyc += r * page / hw.vec_lanes * hw.vec_ew_cost
+                        ops += r * page
+                    if kv_quant:
+                        cyc += 2 * r * page / hw.vec_lanes * hw.vec_ew_cost
+                        ops += 2 * r * page
+                    pj = emit(unit="VEC", cycles=cyc, deps=(sj,),
+                              tag=f"P{st}.{s}.{ht}.{j}", vec_ops=ops,
+                              l1_bytes=2 * r * page * bpe)
+                    vd = dma_page(page_b, deps=prev_step,
+                                  tag=f"V{st}.{s}.{ht}.{j}")
+                    deps = [pj, vd] + (
+                        [prev_acc] if prev_acc is not None else [])
+                    prev_acc = emit(unit="MAC",
+                                    cycles=hh * hw.mac_cycles(rows_t, page,
+                                                              e),
+                                    deps=tuple(deps),
+                                    tag=f"A{st}.{s}.{ht}.{j}",
+                                    mac_ops=hh * rows_t * page * e,
+                                    l1_bytes=(rows_t * page + page * e
+                                              + rows_t * e) * hh * bpe)
+                step_sinks.append(
+                    emit(unit="DMA", cycles=q_b / dma_bpc, deps=(prev_acc,),
+                         tag=f"O{st}.{s}.{ht}", dram_write_bytes=q_b,
+                         l1_bytes=q_b))
+        prev_step = tuple(step_sinks)
+    return tasks
+
+
+# ---------------------------------------------------------------------------
 # Chunked paged prefill: admit one prompt in chunks, decode interleaved.
 # ---------------------------------------------------------------------------
 
@@ -809,6 +929,7 @@ _BUILDERS = {
     "fusemax": build_fusemax,
     "paged_decode": build_paged_decode,
     "chunked_prefill": build_chunked_prefill,
+    "speculative_decode": build_speculative_decode,
 }
 
 
@@ -833,6 +954,11 @@ def tiling_space(w: AttentionWorkload, hw: HWConfig) -> list[Tiling]:
     scheduler, searched jointly with page size and precision, with
     ``None`` (monolithic whole-prompt admission) in the space so the
     search itself decides whether chunking pays.
+
+    Speculative-decode workloads add the SPECULATION DEPTH as a sixth
+    factor (DESIGN.md §9): candidate rows per verify step, searched
+    jointly with page size and precision, with k=1 (plain decode) in
+    the space so the search decides whether speculation pays.
     """
     heads_core = -(-w.heads // hw.cores)
     hhs = sorted({h for h in (1, 2, 4, 8, 16) if h <= heads_core}
@@ -851,6 +977,18 @@ def tiling_space(w: AttentionWorkload, hw: HWConfig) -> list[Tiling]:
         return [Tiling(hh, 1, p, bpe, c)
                 for hh in hhs for p in pages for bpe in bpes
                 for c in chunks]
+    if isinstance(w, SpeculativeDecodeWorkload):
+        # Verify schedule: the SPECULATION DEPTH joins page size, kv-head
+        # tile and precision as the sixth factor (DESIGN.md §9). k=1 is
+        # plain decode and stays in the space, so the search itself
+        # decides whether speculation pays for this acceptance rate.
+        pages = sorted({p for p in (16, 32, 64, 128, 256, 512)
+                        if p <= w.seq} | {w.seq})
+        bpes = sorted({hw.bytes_per_elem, 1})
+        specs = sorted({k for k in (1, 2, 3, 4, 6, 8) if k <= w.seq})
+        return [Tiling(hh, 1, p, bpe, None, k)
+                for hh in hhs for p in pages for bpe in bpes
+                for k in specs]
     if isinstance(w, PagedDecodeWorkload):
         pages = sorted({p for p in (16, 32, 64, 128, 256, 512)
                         if p <= w.seq} | {w.seq})

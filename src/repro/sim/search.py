@@ -71,13 +71,15 @@ def random_search(method, w, hw, iters=200, seed=0, objective="cycles"):
 
 def _factor_levels(space) -> list[list]:
     """Per-tier value sets of the tiling space
-    (H_h, N_Q, N_KV, kv_bpe, chunk).
+    (H_h, N_Q, N_KV, kv_bpe, chunk, spec).
 
-    kv_bpe/chunk sort with ``None`` (native precision / monolithic
-    admission) first so the level ordering is deterministic for spaces
-    that don't search them; the fifth gene widens the MCTS tree and the
-    GA genome only for chunked-prefill workloads (DESIGN.md §6), where
-    it carries the prompt-chunk size.
+    kv_bpe/chunk/spec sort with ``None`` (native precision / monolithic
+    admission / plain decode) first so the level ordering is
+    deterministic for spaces that don't search them; the fifth gene
+    widens the MCTS tree and the GA genome only for chunked-prefill
+    workloads (DESIGN.md §6), where it carries the prompt-chunk size,
+    and the sixth only for speculative-decode workloads (DESIGN.md §9),
+    where it carries the verify depth.
     """
     hhs = sorted({t.hh for t in space})
     nqs = sorted({t.nq for t in space})
@@ -85,7 +87,8 @@ def _factor_levels(space) -> list[list]:
     none_first = lambda v: (-1 if v is None else v)  # noqa: E731
     bpes = sorted({t.kv_bpe for t in space}, key=none_first)
     chunks = sorted({t.chunk for t in space}, key=none_first)
-    return [hhs, nqs, nkvs, bpes, chunks]
+    specs = sorted({t.spec for t in space}, key=none_first)
+    return [hhs, nqs, nkvs, bpes, chunks, specs]
 
 
 def mcts_search(method, w, hw, iters=400, seed=0, c_ucb=1.2,
@@ -95,9 +98,10 @@ def mcts_search(method, w, hw, iters=400, seed=0, c_ucb=1.2,
     Tree levels mirror the paper's per-loop factor assignment: level 1
     picks H_h, level 2 picks N_Q, level 3 picks N_KV, level 4 the KV
     element width (precision as a tiling factor, DESIGN.md §5), level 5
-    the prefill chunk size (chunked-admission workloads, DESIGN.md §6);
-    rollouts complete the remaining levels uniformly; rewards
-    back-propagate 1/cycles.
+    the prefill chunk size (chunked-admission workloads, DESIGN.md §6),
+    level 6 the speculation depth (speculative-decode workloads,
+    DESIGN.md §9); rollouts complete the remaining levels uniformly;
+    rewards back-propagate 1/cycles.
     """
     rng = random.Random(seed)
     space = tiling_space(w, hw)
@@ -144,8 +148,8 @@ def mcts_search(method, w, hw, iters=400, seed=0, c_ucb=1.2,
 
 def ga_search(method, w, hw, iters=400, seed=0, pop=24,
               objective="cycles") -> SearchResult:
-    """Genetic search: genome = (hh, nq, nkv, kv_bpe, chunk); tournament
-    + crossover +
+    """Genetic search: genome = (hh, nq, nkv, kv_bpe, chunk, spec);
+    tournament + crossover +
     mutation. (The paper's GA refines compute orderings of the analysis
     tree; our schedules fix the Alg. 1 order, so GA here explores the
     same genome space as MCTS — convergence comparison stays meaningful.)

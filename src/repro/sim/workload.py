@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +111,95 @@ class PagedDecodeWorkload:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpeculativeDecodeWorkload:
+    """Speculative decode over a paged KV cache (DESIGN.md §9).
+
+    Models emitting ``new_tokens`` tokens per live sequence via verify
+    steps of ``spec`` candidate rows each. Per step the MXU tiles grow
+    to (group * spec) rows and the VEC softmax covers ``spec`` score
+    rows per kv head, but the page-granular KV DMA is charged ONCE —
+    exactly the verify kernel's economics: the gather walks the pool
+    once regardless of how many candidate rows ride along. Acceptance
+    follows the engine's greedy longest-prefix(+bonus) rule under an
+    i.i.d. per-draft acceptance probability ``accept_rate``, so a step
+    lands E(k) = (1 - p^k) / (1 - p) tokens in expectation and the
+    schedule needs ceil(new_tokens / E(k)) serial steps. Minimizing
+    plain simulated cycles therefore already trades step count against
+    per-step width — the SIXTH searchable tiling factor
+    (``Tiling.spec``) has a real, hardware-dependent optimum instead of
+    degenerating to k=1.
+
+    Drafting itself is host-side string matching (``serving.drafter``)
+    and is not charged. ``spec`` here is the workload's PIN (None ->
+    the search supplies it via ``Tiling.spec``); ``heads`` counts KV
+    heads and ``group`` is the GQA group, as in ``PagedDecodeWorkload``.
+    """
+
+    name: str
+    heads: int
+    emb: int
+    kv_lens: tuple[int, ...]      # per-sequence live cache lengths
+    group: int = 1
+    kv_bpe: int | None = None
+    new_tokens: int = 16          # tokens to emit per sequence
+    accept_rate: float = 0.7      # per-draft i.i.d. acceptance prob
+    spec: int | None = None       # pinned depth; None -> Tiling.spec
+
+    @property
+    def batch(self) -> int:
+        return len(self.kv_lens)
+
+    @property
+    def seq(self) -> int:
+        """Longest live sequence — anchors the tiling search space."""
+        return max(self.kv_lens)
+
+    @property
+    def total_kv(self) -> int:
+        return sum(self.kv_lens)
+
+    def expected_tokens_per_step(self, spec: int) -> float:
+        """Accepted tokens per verify step at depth ``spec`` under the
+        greedy longest-prefix + bonus rule: E = sum_{i<k} p^i."""
+        p = self.accept_rate
+        if spec <= 1 or p <= 0.0:
+            return 1.0
+        if p >= 1.0:
+            return float(spec)
+        return (1.0 - p ** spec) / (1.0 - p)
+
+    def n_steps(self, spec: int) -> int:
+        """Serial verify steps to land ``new_tokens`` per sequence."""
+        return max(1, math.ceil(
+            self.new_tokens / self.expected_tokens_per_step(spec)))
+
+    @property
+    def mac_ops(self) -> int:
+        """Useful MACs for the whole generation at the PINNED depth
+        (spec=1 when unpinned): QK^T + PV over live cache entries, one
+        verify step's rows times the step count."""
+        k = self.spec or 1
+        per_step = 2 * self.heads * self.group * k * self.total_kv * self.emb
+        return per_step * self.n_steps(k)
+
+    @property
+    def softmax_elems(self) -> int:
+        k = self.spec or 1
+        return self.heads * self.group * k * self.total_kv * self.n_steps(k)
+
+    def kv_bytes(self, bpe: int, page: int) -> int:
+        """Page-granular K+V DMA for ONE verify step — charged once per
+        step regardless of depth (the whole point of verifying k rows
+        in a single dispatch). Same accounting as ``PagedDecodeWorkload``."""
+        pages = sum(-(-n // page) for n in self.kv_lens)
+        eff = self.kv_bpe or bpe
+        nbytes = 2 * self.heads * pages * page * self.emb * eff
+        if self.kv_bpe is not None and self.kv_bpe < bpe:
+            nbytes += 2 * self.heads * pages * 4  # fp32 page scales
+        return nbytes
+
+
+@dataclasses.dataclass(frozen=True)
 class ChunkedPrefillWorkload:
     """Admission of one long prompt into a paged pool, co-scheduled with
     live decode slots (DESIGN.md §6).
@@ -183,23 +273,26 @@ class ChunkedPrefillWorkload:
 
 def serving_phase_workloads(name: str, prompt_lens, max_new: int, *,
                             heads: int, emb: int, group: int = 1,
-                            batch: int = 4, kv_bpe: int | None = None
-                            ) -> dict:
-    """Sim workloads matching the continuous engine's two step kinds,
-    keyed by the compare phases of ``repro.obs.compare`` (DESIGN.md §8).
+                            batch: int = 4, kv_bpe: int | None = None,
+                            spec: int | None = None,
+                            accept_rate: float = 0.7) -> dict:
+    """Sim workloads matching the continuous engine's step kinds, keyed
+    by the compare phases of ``repro.obs.compare`` (DESIGN.md §8).
 
     Built from the MEASURED request set so the simulated schedule prices
     the same scenario the serving trace recorded: ``decode`` is one
     engine step over ``batch`` live slots at mid-decode cache depth
     (prompt + max_new/2); ``prefill_chunk`` is the admission of the
     longest prompt while the remaining slots decode — exactly what a
-    ``chunk+decode`` step dispatches.
+    ``chunk+decode`` step dispatches. With ``spec`` set, a ``verify``
+    phase joins them: the speculative engine's multi-token verify steps
+    over the same slots (DESIGN.md §9), at the measured acceptance rate.
     """
     lens = sorted((int(p) for p in prompt_lens), reverse=True)
     if not lens:
         raise ValueError("serving_phase_workloads needs >= 1 prompt")
     kv_lens = tuple(p + max_new // 2 for p in lens[:batch])
-    return {
+    phases = {
         "decode": PagedDecodeWorkload(
             f"{name}-decode", heads=heads, emb=emb, group=group,
             kv_lens=kv_lens, kv_bpe=kv_bpe),
@@ -207,6 +300,12 @@ def serving_phase_workloads(name: str, prompt_lens, max_new: int, *,
             f"{name}-admit", heads=heads, emb=emb, group=group,
             prompt=lens[0], decode_kv_lens=kv_lens[1:], kv_bpe=kv_bpe),
     }
+    if spec is not None:
+        phases["verify"] = SpeculativeDecodeWorkload(
+            f"{name}-verify", heads=heads, emb=emb, group=group,
+            kv_lens=kv_lens, kv_bpe=kv_bpe, new_tokens=max_new,
+            accept_rate=accept_rate, spec=spec)
+    return phases
 
 
 # Table 1: Network Configuration and Hyper-Parameters.

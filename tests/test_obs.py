@@ -340,7 +340,12 @@ def test_compare_report_flags_unmatched_phases():
 def test_serving_phase_workloads_shapes():
     w = serving_phase_workloads("x", [48, 8, 24, 16, 5], 16,
                                 heads=2, emb=16, group=2, batch=4)
-    assert set(w) == set(DEFAULT_KIND_TO_PHASE.values())
+    # "verify" only appears when spec= is set (DESIGN.md §9), so a plain
+    # build covers every compare phase except it
+    assert set(w) == set(DEFAULT_KIND_TO_PHASE.values()) - {"verify"}
+    assert set(serving_phase_workloads(
+        "x", [48, 8, 24, 16, 5], 16, heads=2, emb=16, group=2, batch=4,
+        spec=4)) == set(DEFAULT_KIND_TO_PHASE.values())
     assert w["decode"].kv_lens == (56, 32, 24, 16)  # top-4, +max_new/2
     assert w["prefill_chunk"].prompt == 48          # longest prompt
     assert w["prefill_chunk"].decode_kv_lens == (32, 24, 16)
