@@ -28,6 +28,14 @@ chunked-prefill admission search (§6: chunk size as a fifth factor) for
 workloads shaped like the measured request set. ``--smoke`` shrinks the
 request set for the CI invocation.
 
+The ``shared_prefix`` section (DESIGN.md §10) serves a mixed wave where
+half the requests open with one common system prompt: it reports the
+measured hit rate, the ADMISSION-relative hit-vs-cold p50 TTFT ratio,
+pages deduped / COW copies / evictions / leaked pages (ci.sh gates
+these), verifies greedy-token parity against a sharing-off replay, and
+runs the seventh-factor ``cache_frac`` search at the measured and at
+zero hit rate.
+
 ``--trace DIR`` runs one EXTRA traced pass after the timed ones (so
 tracing never pollutes the regression-guarded numbers) and writes the
 DESIGN.md §8 artifact set into DIR: ``serving_trace.json`` (measured
@@ -64,6 +72,7 @@ from repro.sim import (
     EDGE_HW,
     ChunkedPrefillWorkload,
     PagedDecodeWorkload,
+    SharedPrefixWorkload,
     Tiling,
     build_schedule,
     search_tiling,
@@ -205,6 +214,134 @@ def trace_section(model, params, cfg, requests, report: dict,
     }
 
 
+PREFIX_TOKENS = 64      # shared system prompt (whole pages at PAGE=8)
+
+
+def make_prefix_requests(cfg, n: int, seed: int = 1,
+                         *, prefix_tokens: int = PREFIX_TOKENS
+                         ) -> list[Request]:
+    """Shared-prefix scenario (DESIGN.md §10): even rids open with the
+    same ``prefix_tokens``-token system prompt plus a unique suffix,
+    odd rids are fully distinct prompts of the SAME total length (the
+    cold control group — TTFT differences are reuse, not length). The
+    SECOND shared rid is a proper prefix of the first one's prompt,
+    cut mid-page: the publisher's final full page covers the shorter
+    prompt's tail, so — admitted while the publisher is still live and
+    its chain is pinned resident by refcounts — that admission is a
+    FULL hit and exercises the copy-on-write path."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(3, cfg.vocab_size,
+                              size=(prefix_tokens,)).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        suffix = rng.integers(
+            3, cfg.vocab_size,
+            size=(int(rng.integers(8, 17)),)).astype(np.int32)
+        if i % 2 == 0:
+            prompt = np.concatenate([sys_prompt, suffix])
+        else:
+            prompt = rng.integers(3, cfg.vocab_size,
+                                  size=(prefix_tokens
+                                        + len(suffix),)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=MAX_NEW, eos_id=-2))
+    shared = [r for r in reqs if r.rid % 2 == 0]
+    shared[1].prompt = shared[0].prompt[:-3].copy()  # mid-page full hit
+    return reqs
+
+
+def shared_prefix_section(model, params, cfg, n_requests: int) -> dict:
+    """Measure shared-prefix reuse on the continuous engine (§10).
+
+    One serve() call over the mixed hit/cold request set, auditor
+    attached every step; the same set replays with the prefix cache OFF
+    and must produce token-identical greedy output (the parity gate
+    ci.sh enforces). TTFT is reported ADMISSION-relative (first-token
+    stamp minus the admission stamp from the ``admit_walltime_s``
+    series), so queue wait — which the cold control group also pays —
+    cancels out and the hit/miss ratio isolates the skipped prefill
+    chunks. The sim closes the loop: the seventh-factor search over
+    ``cache_frac`` runs at the measured hit rate and at zero hit rate,
+    and should reserve pool only when reuse pays.
+    """
+    requests = make_prefix_requests(cfg, n_requests)
+    aud = PoolAuditor()
+    eng = ContinuousBatchingEngine(model, params, max_len=MAX_LEN,
+                                   batch_size=BATCH, page_size=PAGE,
+                                   chunk_size=CHUNK, prefix_cache=True)
+    eng.auditor = aud
+    eng.serve([Request(**r.__dict__) for r in requests])  # warm-up (jit)
+    out = eng.serve([Request(**r.__dict__) for r in requests])
+    stats = eng.prefix_stats
+    mgr = eng._mgr
+    cached = mgr.cached_pages()
+    leaked = mgr.pages_used - len(cached)
+
+    # admission-relative TTFT, split by whether the admission landed a
+    # resident prefix (the publisher itself counts as a miss)
+    admits = eng.metrics.series("admit_walltime_s").by_key
+    walltimes = eng.token_walltimes
+    hit_ttfts, miss_ttfts = [], []
+    for rid, rec in eng.results.items():
+        ts = walltimes.get(rid)
+        if not ts or rid not in admits:
+            continue
+        ttft = ts[0] - admits[rid][0]
+        (hit_ttfts if rec.prefix_hit_tokens else miss_ttfts).append(ttft)
+
+    def pct(xs, q):
+        return float(np.percentile(xs, q)) if xs else 0.0
+
+    hit_p50, miss_p50 = pct(hit_ttfts, 50), pct(miss_ttfts, 50)
+
+    # greedy-token parity: the same requests, sharing off
+    cold = ContinuousBatchingEngine(model, params, max_len=MAX_LEN,
+                                    batch_size=BATCH, page_size=PAGE,
+                                    chunk_size=CHUNK)
+    out_cold = cold.serve([Request(**r.__dict__) for r in requests])
+    for rid in out_cold:
+        np.testing.assert_array_equal(out_cold[rid], out[rid])
+
+    # the sim's view of the same trade: the SEVENTH search factor
+    # (cache_frac) at the measured hit rate vs a zero-hit workload —
+    # the reserve should only be bought when reuse pays (§10)
+    group = cfg.num_heads // cfg.num_kv_heads
+    plen = int(np.mean([len(r.prompt) for r in requests]))
+
+    def reserve_search(hit_rate):
+        w = SharedPrefixWorkload(
+            "serving_prefix", heads=cfg.num_kv_heads, emb=cfg.hd,
+            group=group, prompt=max(plen, 2 * PREFIX_TOKENS),
+            prefix=PREFIX_TOKENS, pool_pages=eng.num_pages - 1,
+            n_requests=n_requests, hit_rate=hit_rate,
+            new_tokens=MAX_NEW)
+        s = search_tiling("shared_prefix", w, EDGE_HW, strategy="grid")
+        return {"hit_rate": hit_rate,
+                "best_cache_frac": s.tiling.cache_frac,
+                "best_page_size": s.tiling.nkv,
+                "cycles": s.result.cycles, "evals": s.evals}
+
+    sim_hot = reserve_search(stats["hit_rate"])
+    sim_zero = reserve_search(0.0)
+
+    return {
+        "n_requests": n_requests,
+        "prefix_tokens": PREFIX_TOKENS,
+        "cache_reserve_frac": eng.cache_reserve_frac,
+        **stats,
+        "pages_leaked": leaked,
+        "resident_cache_pages": len(cached),
+        "ttft_hit_s": {"p50": hit_p50, "p95": pct(hit_ttfts, 95)},
+        "ttft_miss_s": {"p50": miss_p50, "p95": pct(miss_ttfts, 95)},
+        # headline: cold p50 admission-to-first-token over hit p50
+        # (guarded by check_bench_regression.py --prefix-threshold)
+        "prefix_ttft_ratio": miss_p50 / hit_p50 if hit_p50 else 0.0,
+        "token_parity": True,
+        "auditor_steps": aud.steps_checked,
+        "sim_reserve_search": {"measured": sim_hot, "zero_hit": sim_zero},
+    }
+
+
 def run(n_requests: int, trace_dir=None) -> dict:
     cfg = get_smoke(ARCH)
     model = build_model(cfg)
@@ -343,6 +480,11 @@ def run(n_requests: int, trace_dir=None) -> dict:
             "evals": best_c.evals,
         },
     }
+    report["shared_prefix"] = shared_prefix_section(model, params, cfg,
+                                                    n_requests)
+    # headline guarded by check_bench_regression.py --prefix-threshold
+    report["prefix_ttft_ratio"] = \
+        report["shared_prefix"]["prefix_ttft_ratio"]
     if trace_dir is not None:
         report["trace"] = trace_section(model, params, cfg, requests,
                                         report, trace_dir)
@@ -362,7 +504,9 @@ def main(emit, n_requests: int = 12, trace_dir=None) -> dict:
         f"preempt={report['preemption']['preemptions']} "
         f"recompute={report['preemption']['recompute_tokens']}tok "
         f"sim_page={report['sim_page_search']['best_page_size']} "
-        f"sim_chunk={report['sim_chunk_search']['best_chunk']}",
+        f"sim_chunk={report['sim_chunk_search']['best_chunk']} "
+        f"prefix_ttft={report['prefix_ttft_ratio']:.2f}x "
+        f"prefix_hit={report['shared_prefix']['hit_rate']:.2f}",
     )
     return report
 
@@ -394,6 +538,16 @@ if __name__ == "__main__":
           f"{p['failed_requests']} failed, "
           f"{p['pages_leaked']} pages leaked "
           f"({p['auditor_steps']} steps audited)")
+    sp = r["shared_prefix"]
+    print(f"shared prefix:    hit_rate {sp['hit_rate']:.2f}  "
+          f"hit p50 TTFT {sp['ttft_hit_s']['p50'] * 1e3:6.1f} ms vs "
+          f"cold {sp['ttft_miss_s']['p50'] * 1e3:6.1f} ms "
+          f"({sp['prefix_ttft_ratio']:.2f}x), "
+          f"{sp['pages_deduped']} pages deduped, "
+          f"{sp['cow_copies']} COW, {sp['evictions']} evictions, "
+          f"{sp['pages_leaked']} leaked; sim reserve "
+          f"{sp['sim_reserve_search']['measured']['best_cache_frac']} @hit "
+          f"/ {sp['sim_reserve_search']['zero_hit']['best_cache_frac']} @0")
     if "trace" in r:
         t = r["trace"]
         ratios = " ".join(f"{ph}={v:.1f}x"

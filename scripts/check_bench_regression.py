@@ -25,6 +25,13 @@ same process: machine-normalized like the others) — is guarded the same
 way so recompute-preemption overhead can't silently grow
 (DESIGN.md §7). Baselines missing the key (pre-lifecycle) skip it.
 
+``prefix_ttft_ratio`` — the shared-prefix reuse win (cold p50
+admission-to-first-token over hit p50, same process and request wave:
+machine-normalized like the others) — is guarded by
+``--prefix-threshold`` so prefix-cache admission can't silently stop
+paying (DESIGN.md §10). Baselines missing the key (pre-prefix-cache)
+skip it.
+
 ``--spec-baseline/--spec-current BENCH_spec.json`` guard the
 speculative-decoding benchmark (DESIGN.md §9) the same way: the
 simulated speedup of the searched speculation depth over the k=1
@@ -146,6 +153,9 @@ def main() -> int:
     ap.add_argument("--preempt-threshold", type=float, default=0.25,
                     help="max fractional drop allowed in throughput "
                          "retained under the injected preemption burst")
+    ap.add_argument("--prefix-threshold", type=float, default=0.35,
+                    help="max fractional drop allowed in the shared-"
+                         "prefix hit-vs-cold p50 TTFT ratio")
     ap.add_argument("--metrics", type=Path, default=None,
                     help="metrics-registry JSON from the traced serving "
                          "pass; consistency-checked against CURRENT.json")
@@ -240,6 +250,24 @@ def main() -> int:
     else:
         print("bench-guard: no preemption_ratio in one of the files; "
               "skipping preemption guard")
+
+    # shared-prefix reuse win (DESIGN.md §10): cold p50 admission-to-
+    # first-token over hit p50, same process (machine-normalized like
+    # the others). Missing in pre-prefix-cache baselines: skip.
+    b_px = base.get("prefix_ttft_ratio")
+    c_px = cur.get("prefix_ttft_ratio")
+    if b_px and c_px is not None:
+        px_drop = 1.0 - c_px / b_px
+        print(f"bench-guard: shared-prefix TTFT win (cold/hit p50): "
+              f"{b_px:.2f}x -> {c_px:.2f}x ({-px_drop:+.1%})")
+        if px_drop > args.prefix_threshold:
+            print(f"bench-guard: shared-prefix TTFT ratio dropped "
+                  f"{px_drop:.1%} > {args.prefix_threshold:.0%} vs "
+                  f"committed baseline", file=sys.stderr)
+            return 1
+    else:
+        print("bench-guard: no prefix_ttft_ratio in one of the files; "
+              "skipping shared-prefix guard")
 
     if args.metrics is not None:
         metrics = json.loads(args.metrics.read_text())

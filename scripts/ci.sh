@@ -37,7 +37,8 @@ python scripts/validate_trace.py "$TRACE_DIR/serving_trace.json" \
   "$TRACE_DIR/sim_trace.json"
 python scripts/check_bench_regression.py "$BENCH_BASELINE" \
   BENCH_serving.json --threshold 0.10 --ttft-threshold 0.35 \
-  --preempt-threshold 0.25 --metrics "$TRACE_DIR/metrics.json"
+  --preempt-threshold 0.25 --prefix-threshold 0.35 \
+  --metrics "$TRACE_DIR/metrics.json"
 
 # Observability hard gates (DESIGN.md §8): the measured trace must
 # carry one lifecycle span per request and per-step spans for every
@@ -90,6 +91,40 @@ assert p["ttft_inflation_p95"] < 10.0, f"pathological TTFT inflation: {p}"
 print(f"lifecycle gates OK: {p['preemptions']} preemptions, "
       f"{p['recompute_tokens']} recompute tokens, "
       f"p95 TTFT x{p['ttft_inflation_p95']:.2f}")
+PY
+
+# Shared-prefix hard gates (DESIGN.md §10): the mixed hit/cold wave
+# must actually share (hits, deduped pages), exercise copy-on-write on
+# the mid-page full hit and LRU eviction under reserve pressure, drain
+# with ZERO leaked pages beyond the retained prefix cache, stay
+# greedy-token identical to the sharing-off replay, and beat cold
+# admission on p50 admission-to-first-token. The sim's seventh-factor
+# search must buy reserve at the measured hit rate and refuse it at
+# zero hit rate.
+python - <<'PY'
+import json
+
+sp = json.load(open("BENCH_serving.json"))["shared_prefix"]
+assert sp["hits"] >= 1 and sp["pages_deduped"] >= 1, (
+    f"no sharing happened: {sp}")
+assert sp["cow_copies"] >= 1, f"copy-on-write never exercised: {sp}"
+assert sp["evictions"] >= 1, f"prefix eviction never exercised: {sp}"
+assert sp["pages_leaked"] == 0, f"page leak with sharing on: {sp}"
+assert sp["token_parity"], f"shared-vs-unshared output diverged: {sp}"
+assert sp["prefix_ttft_ratio"] > 1.0, (
+    f"prefix hits no faster than cold admission: {sp}")
+assert sp["auditor_steps"] > 0, f"pool auditor never ran: {sp}"
+s = sp["sim_reserve_search"]
+assert s["measured"]["best_cache_frac"] > 0.0, (
+    f"search refused a reserve at the measured hit rate: {s}")
+assert s["zero_hit"]["best_cache_frac"] == 0.0, (
+    f"search bought a reserve with nothing to reuse: {s}")
+print(f"shared-prefix gates OK: hit_rate={sp['hit_rate']:.2f}, "
+      f"{sp['pages_deduped']} pages deduped, {sp['cow_copies']} COW, "
+      f"{sp['evictions']} evictions, 0 leaked, "
+      f"TTFT x{sp['prefix_ttft_ratio']:.2f}, "
+      f"sim reserve {s['measured']['best_cache_frac']} @hit / "
+      f"{s['zero_hit']['best_cache_frac']} @0")
 PY
 
 # Int8 KV-cache smoke: greedy agreement + simulated decode speedup vs

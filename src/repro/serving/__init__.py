@@ -19,11 +19,13 @@ from repro.serving.lifecycle import (
     validate_request,
 )
 from repro.serving.paged_cache import (
+    AdmitResult,
     PageAccountingError,
     PagedCacheError,
     PagedKVCacheManager,
     PagePoolExhausted,
     PoolConfigError,
+    PrefixMatch,
 )
 
 __all__ = [
@@ -46,4 +48,6 @@ __all__ = [
     "PagePoolExhausted",
     "PageAccountingError",
     "PoolConfigError",
+    "PrefixMatch",
+    "AdmitResult",
 ]

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.autotune import (
+    tune_cache_reserve,
     tune_pool_headroom,
     tune_prefill_chunk,
     tune_spec_depth,
@@ -384,7 +385,9 @@ class ContinuousBatchingEngine:
                  headroom_pages: int | None = None,
                  max_preemptions: int = 32, tracer=None,
                  spec_depth: int | str | None = None,
-                 spec_ngram: int = 3):
+                 spec_ngram: int = 3,
+                 prefix_cache: bool = False,
+                 cache_reserve_frac: float | str = "auto"):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -438,6 +441,33 @@ class ContinuousBatchingEngine:
         self.spec_depth = spec_depth
         self._drafter = (NgramDrafter(ngram=spec_ngram)
                          if spec_depth is not None else None)
+        # shared-prefix KV reuse (DESIGN.md §10): admission maps resident
+        # prompt pages, chunked prefill resumes at the first non-resident
+        # page, and a full hit skips prefill entirely behind one
+        # copy-on-write page copy. Off by default: the cold path is
+        # byte-identical to a cacheless engine.
+        self.prefix_cache = bool(prefix_cache)
+        if cache_reserve_frac == "auto":
+            # analytical default; the searched seventh tiling factor
+            # (sim/schedules.py) owns the workload-specific answer
+            cache_reserve_frac = tune_cache_reserve(
+                pool_pages=num_pages - 1, page=page_size,
+                slots=batch_size, pages_per_seq=self.max_pages,
+                prefix_tokens=max_len // 4, hit_rate=0.5,
+            ) if self.prefix_cache else 0.0
+        if not 0.0 <= float(cache_reserve_frac) <= 1.0:
+            raise ValueError(
+                f"cache_reserve_frac must be in [0, 1], got "
+                f"{cache_reserve_frac}")
+        self.cache_reserve_frac = float(cache_reserve_frac)
+        # single-page copy-on-write: the page axis is axis 2 in every
+        # pool leaf ((U, Hkv, P, page, E) values, (U, Hkv, P) scales),
+        # so one tree-map copies K, V and the int8 scale side-tables of
+        # the divergence page in one fused donated dispatch
+        self._cow = jax.jit(
+            lambda c, src, dst: jax.tree.map(
+                lambda a: a.at[:, :, dst].set(a[:, :, src]), c),
+            donate_argnums=0)
         self.peak_pages_used = 0  # across serve() calls, for benchmarks
         # per-step scheduler trace of the LAST serve() call: whether a
         # prompt chunk was packed and how many decode slots were live
@@ -594,11 +624,32 @@ class ContinuousBatchingEngine:
         return {"drafted": drafted, "accepted": accepted,
                 "acceptance_rate": accepted / drafted if drafted else 0.0}
 
+    @property
+    def prefix_stats(self) -> dict:
+        """Shared-prefix summary of the last serve() call (DESIGN.md
+        §10): hit/miss admissions, prompt tokens served from cache,
+        copy-on-write copies, LRU evictions and deduped pages. All
+        zeros when the prefix cache is off."""
+        c = self.metrics.counter
+        hits = int(c("prefix.hits").value)
+        misses = int(c("prefix.misses").value)
+        return {
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+            "hit_tokens": int(c("prefix.hit_tokens").value),
+            "cow_copies": int(c("prefix.cow_copies").value),
+            "evictions": int(c("prefix.evictions").value),
+            "pages_deduped": int(c("prefix.pages_deduped").value),
+        }
+
     def serve(self, requests: list[Request]) -> dict[int, np.ndarray]:
         B, ps = self.batch_size, self.page_size
         mgr = PagedKVCacheManager(self.num_pages, ps, num_slots=B,
                                   max_pages_per_seq=self.max_pages,
-                                  kv_dtype=self.kv_dtype)
+                                  kv_dtype=self.kv_dtype,
+                                  prefix_cache=self.prefix_cache,
+                                  cache_reserve_frac=self.cache_reserve_frac)
         self._mgr = mgr  # auditable by tests while serve() is live
         cache = self.model.make_cache(B, self.max_len, cache_layout="paged",
                                       page_size=ps, num_pages=self.num_pages,
@@ -639,6 +690,39 @@ class ContinuousBatchingEngine:
                                "draft candidates matching greedy argmax")
         m_accept_rate = m.series("spec.acceptance_rate",
                                  "per-verify-step draft acceptance by rid")
+        # shared-prefix telemetry (DESIGN.md §10): the counters mirror
+        # the manager's own stats (synced by delta once per step, so
+        # mid-serve reads are live) and the gauge tracks the index's
+        # resident pages per step next to pool occupancy
+        m_px_counters = [
+            (m.counter("prefix.hits", "admissions served a resident prefix"),
+             "prefix_hits"),
+            (m.counter("prefix.misses",
+                       "prefix-cache admissions with no resident prefix"),
+             "prefix_misses"),
+            (m.counter("prefix.hit_tokens",
+                       "prompt tokens satisfied from shared pages"),
+             "prefix_hit_tokens"),
+            (m.counter("prefix.cow_copies",
+                       "divergence pages copied on write"), "cow_copies"),
+            (m.counter("prefix.evictions",
+                       "cached prefix entries dropped (LRU / reserve cap)"),
+             "prefix_evictions"),
+            (m.counter("prefix.pages_deduped",
+                       "page allocations avoided by mapping shared pages"),
+             "pages_deduped"),
+        ]
+        m_px_resident = m.gauge("prefix.resident_cache_pages",
+                                "pages retained by the prefix index")
+        m_admit = m.series("admit_walltime_s",
+                           "admission wall-clock stamp by rid")
+
+        def sync_prefix_metrics():
+            for c, attr in m_px_counters:
+                d = getattr(mgr, attr) - int(c.value)
+                if d > 0:
+                    c.inc(d)
+
         spec_state: dict[int, dict] = {}  # rid -> {"ema", "k"}
         tr = self.tracer
         tracing = tr.enabled
@@ -790,8 +874,14 @@ class ContinuousBatchingEngine:
             """Admit the head-of-queue request into a free slot (FIFO:
             reservation-based, one prefill stream at a time). Preempted
             requests sit at the head and re-prefill prompt+generated;
-            fresh admissions leave ``headroom_pages`` free for them."""
-            nonlocal pending
+            fresh admissions leave ``headroom_pages`` free for them.
+            With the prefix cache on, admission maps the longest
+            resident prefix: chunked prefill resumes at the first
+            non-resident page, and a FULL hit never enters the prefill
+            stream at all — the divergence page is copied on device
+            (copy-on-write) and the slot goes straight to DECODING, so
+            several full hits can admit in one call (DESIGN.md §10)."""
+            nonlocal pending, cache
             while queue:
                 rec = queue[0]
                 if rec.remaining <= 0:  # nothing (left) to generate
@@ -807,28 +897,63 @@ class ContinuousBatchingEngine:
                     rec.remaining,
                     max(1, int(np.ceil(rec.remaining
                                        * self.decode_reserve_frac))))
-                need = mgr.pages_needed(plen + reserve)
+                match = (mgr.match_prefix(rprompt)
+                         if self.prefix_cache else None)
+                need_total, need_new = mgr.admit_plan(plen, reserve, match)
                 headroom = 0 if rec.resumed else max(
                     0, min(self.headroom_pages,
-                           (self.num_pages - 1) - need))
+                           (self.num_pages - 1) - need_total))
                 free = [s for s in range(B) if s not in active]
-                if (not free or not mgr.can_admit(plen + reserve)
-                        or mgr.available - need < headroom):
+                # the gate draws only the NON-resident pages from the
+                # free list (plus cold cache ``alloc`` can reclaim)
+                if (not free or need_total > mgr.max_pages_per_seq
+                        or need_new > mgr.free_capacity
+                        or mgr.free_capacity - need_new < headroom):
                     return  # FIFO: wait for slot/pages, don't starve
                 if self.injector.admit_fault(step_idx, rec.rid):
                     return  # injected admission rejection: retry later
                 queue.popleft()
                 slot = free[0]
-                mgr.admit(slot, plen, reserve=reserve)
+                res = mgr.admit_prefix(slot, plen, reserve=reserve,
+                                       match=match)
                 if rec.admit_seq is None:
                     rec.admit_seq = next(admit_seq)
+                m_admit.observe(rec.rid, time.perf_counter())
+                rec.prefix_hit_tokens += res.prefix_tokens
                 if rec.resumed:
-                    rec.recompute_tokens += plen
-                    m_recompute.inc(plen)
+                    # only the tokens actually re-prefilled count as
+                    # recompute — a resident prefix (often the victim's
+                    # own published pages) shrinks the preemption bill
+                    redo = plen - res.prefix_tokens
+                    rec.recompute_tokens += redo
+                    m_recompute.inc(redo)
                 rec.to(RequestState.PREFILLING)
                 self.peak_pages_used = max(self.peak_pages_used,
                                            mgr.peak_pages_used)
-                pending = [rec, slot, 0, rprompt]
+                if res.full_hit:
+                    # whole prompt resident: copy the divergence page
+                    # (K, V and scale side-tables move together), then
+                    # start decode at plen-1 — the next decode step
+                    # re-feeds the last prompt token through the shared
+                    # KV and emits the first generated token, exactly
+                    # the logits the cold path reads off its last chunk
+                    src, dst = res.cow
+                    cache = self._cow(cache, jnp.int32(src),
+                                      jnp.int32(dst))
+                    if tracing:
+                        tr.instant("prefix_hit", track="engine",
+                                   args={"rid": rec.rid, "tokens": plen,
+                                         "cow_src": src, "cow_dst": dst})
+                    rec.to(RequestState.DECODING)
+                    active[slot] = rec
+                    tokens[slot, 0] = int(rprompt[-1])
+                    positions[slot] = plen - 1
+                    continue  # the prefill stream is still free
+                if tracing and res.prefix_tokens:
+                    tr.instant("prefix_hit", track="engine",
+                               args={"rid": rec.rid,
+                                     "tokens": res.prefix_tokens})
+                pending = [rec, slot, res.prefix_tokens, rprompt]
                 return
 
         stalls = 0
@@ -869,6 +994,9 @@ class ContinuousBatchingEngine:
                     step_idx += 1
                     continue  # reservation churn evicted every slot
             m_occ.record(mgr.pages_used)
+            if self.prefix_cache:
+                m_px_resident.record(len(mgr.cached_pages()))
+                sync_prefix_metrics()
             self.step_log.append({"prefill_in_flight": pending is not None,
                                   "live_decode": len(active)})
             kind = (("verify" if spec_plan is not None else "decode")
@@ -1076,6 +1204,11 @@ class ContinuousBatchingEngine:
                         tokens[slot_i, 0] = t
             if pending is not None:
                 q0 += clen
+                if self.prefix_cache:
+                    # publish the freshly-written FULL prompt pages at
+                    # chunk-write time: the next identical prompt maps
+                    # them instead of re-prefilling (DESIGN.md §10)
+                    mgr.publish_prefix(slot, rprompt[:q0])
                 if q0 >= plen:  # prefill complete: first token is out
                     if not ok_host[-1]:
                         rec.fail("non-finite logits")
@@ -1105,6 +1238,9 @@ class ContinuousBatchingEngine:
             step_idx += 1
         self.peak_pages_used = max(self.peak_pages_used,
                                    mgr.peak_pages_used)
+        if self.prefix_cache:
+            sync_prefix_metrics()
+            m_px_resident.set(len(mgr.cached_pages()))
         if self.auditor is not None:
             self.auditor.final_check(mgr)
         return {rid: np.array(rec.tokens, np.int32)

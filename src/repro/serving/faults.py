@@ -15,11 +15,13 @@ nothing else. Two concrete injectors cover the test/benchmark needs:
 
 ``PoolAuditor`` is the step invariant: after every engine step it
 re-derives the page accounting from scratch (free list + per-slot
-ownership must partition the pool, no duplicates, lengths within
+mappings + the prefix index must partition the pool with shared pages
+counted ONCE, per-page refcounts must equal the independently
+re-derived slot/index reference total, no duplicates, lengths within
 capacity, engine positions consistent with ``kv_lens``) and raises
 ``PoolAuditError`` on the first violation — a seeded double-free or a
 leaked page is caught the step it happens, not when the bench numbers
-drift (DESIGN.md §7).
+drift (DESIGN.md §7, §10).
 """
 
 from __future__ import annotations
@@ -141,28 +143,49 @@ class PoolAuditor:
               expected_lens: Mapping[int, int] | None = None) -> None:
         free = mgr.free_pages()
         owned = mgr.owned_pages()
+        cached = mgr.cached_pages()
         if len(set(free)) != len(free):
             dup = sorted(p for p in set(free) if free.count(p) > 1)
             raise PoolAuditError(f"free list holds duplicates: {dup}")
-        seen: dict[int, int] = {}
+        # re-derive every page's reference total from the tables + the
+        # prefix index, independently of the manager's own counters: a
+        # shared page counts once per mapping slot plus once if the
+        # index retains it (DESIGN.md §10)
+        derived: dict[int, int] = {}
         for slot, pages in owned.items():
+            in_slot: set[int] = set()
             for p in pages:
                 if p == SCRATCH_PAGE or not 0 < p < mgr.num_pages:
                     raise PoolAuditError(
                         f"slot {slot} owns invalid page id {p}")
-                if p in seen:
+                if p in in_slot:
                     raise PoolAuditError(
-                        f"page {p} owned by slots {seen[p]} and {slot}")
-                seen[p] = slot
-        both = set(free) & set(seen)
+                        f"page {p} mapped twice by slot {slot}")
+                in_slot.add(p)
+                derived[p] = derived.get(p, 0) + 1
+        for p in cached:
+            if p == SCRATCH_PAGE or not 0 < p < mgr.num_pages:
+                raise PoolAuditError(f"prefix index holds invalid page {p}")
+            derived[p] = derived.get(p, 0) + 1
+        used = set(derived)  # shared pages counted ONCE in occupancy
+        both = set(free) & used
         if both:
             raise PoolAuditError(
                 f"pages both free and owned (leaked free): {sorted(both)}")
-        total = len(free) + len(seen)
+        total = len(free) + len(used)
         if total != mgr.num_pages - 1:
             raise PoolAuditError(
-                f"page leak: free {len(free)} + owned {len(seen)} = "
+                f"page leak: free {len(free)} + in-use {len(used)} = "
                 f"{total} != pool {mgr.num_pages - 1}")
+        refs = mgr.page_refs()
+        if refs != derived:
+            bad = {p: (refs.get(p), derived.get(p))
+                   for p in set(refs) | set(derived)
+                   if refs.get(p) != derived.get(p)}
+            raise PoolAuditError(
+                f"refcounts disagree with re-derived references "
+                f"(page: recorded, derived): {bad}")
+        mgr.prefix_integrity_check()
         lens = mgr.kv_lens()
         for slot, pages in owned.items():
             n = int(lens[slot])
@@ -194,10 +217,27 @@ class PoolAuditor:
         self.steps_checked += 1
 
     def final_check(self, mgr: PagedKVCacheManager) -> None:
-        """After serve() drains: every page must be back on the free
-        list — anything else is a leak some terminal path forgot."""
+        """After serve() drains: no sequence may still hold pages, and
+        anything not on the free list must be EXACTLY the intentionally
+        retained cached prefixes — each held by the index alone
+        (refcount 1) and within the cache-reserve budget. Anything else
+        is a leak some terminal path forgot (with the prefix cache off
+        this degenerates to 'the pool is empty')."""
         self.check(mgr)
-        if mgr.pages_used != 0:
+        if mgr.owned_pages():
             raise PoolAuditError(
-                f"{mgr.pages_used} pages leaked after drain: "
-                f"{mgr.owned_pages()}")
+                f"live sequences survived the drain: {mgr.owned_pages()}")
+        cached = mgr.cached_pages()
+        if mgr.pages_used != len(cached):
+            raise PoolAuditError(
+                f"{mgr.pages_used - len(cached)} pages leaked after "
+                f"drain beyond the {len(cached)} cached-prefix pages")
+        refs = mgr.page_refs()
+        hot = {p: c for p, c in refs.items() if c != 1}
+        if hot:
+            raise PoolAuditError(
+                f"drained pool holds pages with refcount != 1: {hot}")
+        if len(cached) > mgr.reserve_pages and mgr.prefix_cache:
+            raise PoolAuditError(
+                f"index retains {len(cached)} pages > cache reserve "
+                f"{mgr.reserve_pages}")

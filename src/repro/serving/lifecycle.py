@@ -92,6 +92,7 @@ class RequestRecord:
     error: str | None = None
     preemptions: int = 0
     recompute_tokens: int = 0    # prompt+prefix tokens re-prefilled
+    prefix_hit_tokens: int = 0   # prompt tokens served from shared pages
     admit_seq: int | None = None  # first-admission order (preemption age)
     # transition observer: called as (record, old_state, new_state) AFTER
     # every successful ``to()`` — how the engines drive per-request trace

@@ -28,17 +28,52 @@ layout — ``page_footprint_bytes`` is the per-page DMA/residency cost
 incl. the scales side-traffic — while the device arrays live in the
 model cache pytree. The quantizers themselves are shared with the
 kernels (``repro.kernels.common``) and re-exported here.
+
+Shared-prefix reuse (DESIGN.md §10): pages are REFCOUNTED — a page's
+count is the number of live sequences mapping it plus one if the
+prefix index retains it — and ``release``/``free`` both run through
+one decrement path (``_decref``), truly freeing a page only at zero.
+The prefix index keys full pages of prompt KV on a hash chain
+(``h(parent_hash, tokens_in_page)``); ``publish_prefix`` registers a
+sequence's full prompt pages at chunk-write time, ``match_prefix``
+walks the chain at admission, and ``admit_prefix`` maps the hit pages
+into the new sequence's table so chunked prefill restarts at the first
+non-resident page. Shared pages are read-only by construction: every
+append lands in a sequence's private tail, and a full-prompt hit maps
+the divergence page copy-on-write (the engine copies that single page
+on device and the table names the private copy — ``AdmitResult.cow``).
+Unreferenced cached prefixes are evicted LRU inside ``alloc`` BEFORE
+the pool reports exhaustion, so cold cache is always reclaimed before
+any live request is preempted (§7 ordering), and a
+``cache_reserve_frac`` cap bounds how much of the pool the index may
+retain after its publishers drain.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 
 from repro.kernels.common import dequantize_q8, quantize_q8  # noqa: F401
 
 SCRATCH_PAGE = 0
+
+# Hash-chain root: the parent key of a prompt's first page. Any 16-byte
+# constant works — matches are verified against the stored tokens, so
+# the digest only narrows the search, it never decides it.
+PREFIX_ROOT = b"\x00" * 16
+
+
+def chain_key(parent: bytes, tokens) -> bytes:
+    """Key of the page holding ``tokens`` whose predecessor hashed to
+    ``parent``: ``blake2b(parent || tokens)``. Chaining makes the key
+    position-dependent, so identical token blocks at different prompt
+    offsets (whose KV differs under RoPE) never collide."""
+    h = hashlib.blake2b(parent, digest_size=16)
+    h.update(np.asarray(tokens, np.int64).tobytes())
+    return h.digest()
 
 
 def page_footprint_bytes(*, num_layers: int, num_kv_heads: int,
@@ -65,9 +100,10 @@ class PagePoolExhausted(PagedCacheError):
 
 
 class PageAccountingError(PagedCacheError):
-    """Ownership violation: double-free, freeing an unowned slot, or
-    admitting into an occupied slot — a caller bug that would silently
-    corrupt the free list if trusted."""
+    """Refcount violation: double-free (of a private OR shared page),
+    freeing a never-admitted slot, or admitting into an occupied slot —
+    a caller bug that would silently corrupt the free list or a
+    neighbor's shared pages if trusted."""
 
 
 class PoolConfigError(PagedCacheError):
@@ -78,10 +114,53 @@ class PoolConfigError(PagedCacheError):
 class PagedSeq:
     pages: list[int]
     length: int  # live tokens (kv_len)
+    # prefix-publication watermark: pages[:pub_pages] are registered in
+    # the index, pub_key is the chain key of the last published page
+    # (PREFIX_ROOT before any). Full-hit admissions set pub_pages past
+    # the prompt so decode output is never published as "prefix".
+    pub_pages: int = 0
+    pub_key: bytes = PREFIX_ROOT
 
     @property
     def capacity(self) -> int:
         return len(self.pages)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixMatch:
+    """Resident prefix found for a prompt (``match_prefix``).
+
+    ``pages`` covers ``tokens`` prompt tokens; ``full`` means the WHOLE
+    prompt is resident (the last page possibly partially — its tail
+    rows belong to a longer publisher and are masked by kv_len).
+    ``key`` is the chain key after the matched FULL pages — the publish
+    watermark a partial-hit sequence resumes from.
+    """
+    pages: tuple[int, ...]
+    tokens: int
+    full: bool
+    key: bytes
+    full_pages: int  # pages matched via whole-page chain entries
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmitResult:
+    """Outcome of ``admit_prefix``: the sequence's page list, how many
+    prompt tokens were satisfied from cache, and — for a full hit — the
+    single (src, dst) device page copy the engine must perform before
+    the first decode step writes into the divergence page."""
+    pages: tuple[int, ...]
+    prefix_tokens: int
+    full_hit: bool
+    cow: tuple[int, int] | None
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    page: int
+    parent: bytes
+    tokens: tuple[int, ...]  # the page's token block (collision check)
+    last_use: int
 
 
 class PagedKVCacheManager:
@@ -91,30 +170,57 @@ class PagedKVCacheManager:
     allocates pages for a prompt plus an optional decode reservation,
     ``append`` extends a sequence one token (allocating a page on
     boundary crossings past the reservation), ``free`` returns every
-    page to the pool.
+    page to the pool. With ``prefix_cache=True`` the manager also runs
+    the shared-prefix index (see module docstring).
     """
 
     def __init__(self, num_pages: int, page_size: int, *,
                  num_slots: int, max_pages_per_seq: int,
-                 kv_dtype="bfloat16"):
+                 kv_dtype="bfloat16", prefix_cache: bool = False,
+                 cache_reserve_frac: float = 0.5):
         if num_pages <= 1:
             raise PoolConfigError(
                 f"pool needs at least one page beyond scratch, got "
                 f"num_pages={num_pages}"
+            )
+        if not 0.0 <= cache_reserve_frac <= 1.0:
+            raise PoolConfigError(
+                f"cache_reserve_frac must be in [0, 1], got "
+                f"{cache_reserve_frac}"
             )
         self.num_pages = num_pages
         self.page_size = page_size
         self.num_slots = num_slots
         self.max_pages_per_seq = max_pages_per_seq
         self.kv_dtype = np.dtype(kv_dtype)
+        self.prefix_cache = prefix_cache
+        self.cache_reserve_frac = float(cache_reserve_frac)
+        # pages the index may keep pinned once no live sequence shares
+        # them — the pool split the §10 search factor tunes
+        self.reserve_pages = int(round(self.cache_reserve_frac
+                                       * (num_pages - 1)))
         # LIFO free list, scratch page 0 excluded
         self._free = list(range(num_pages - 1, 0, -1))
         self._seqs: dict[int, PagedSeq] = {}
-        # page id -> owning slot, maintained by alloc-for-slot/release:
-        # the refcount audit that turns a double-free or an unowned free
-        # into a precise error instead of free-list corruption
-        self._owner: dict[int, int] = {}
+        # page id -> refcount: live sequences mapping the page, +1 while
+        # the prefix index retains it. Replaces the old single-owner
+        # audit — a free of an unknown page (refcount gone) is a precise
+        # PageAccountingError instead of free-list corruption.
+        self._ref: dict[int, int] = {}
+        # prefix index: chain key -> entry, parent key -> child keys,
+        # page id -> its chain key
+        self._px: dict[bytes, _PrefixEntry] = {}
+        self._px_children: dict[bytes, set[bytes]] = {}
+        self._px_page_key: dict[int, bytes] = {}
+        self._clock = 0  # LRU tick, bumped on every index touch
         self.peak_pages_used = 0
+        # §10 telemetry, mirrored into the engine's metrics registry
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_hit_tokens = 0
+        self.pages_deduped = 0
+        self.cow_copies = 0
+        self.prefix_evictions = 0
 
     # -- pool accounting --
     @property
@@ -125,53 +231,313 @@ class PagedKVCacheManager:
     def pages_used(self) -> int:
         return (self.num_pages - 1) - len(self._free)
 
+    @property
+    def reclaimable(self) -> int:
+        """Cached-prefix pages held ONLY by the index (refcount 1):
+        pages eviction can return to the free list right now."""
+        return sum(1 for p in self._px_page_key
+                   if self._ref.get(p) == 1)
+
+    @property
+    def free_capacity(self) -> int:
+        """Pages an allocation may draw on: the free list plus cold
+        cache the LRU eviction inside ``alloc`` can reclaim."""
+        return len(self._free) + self.reclaimable
+
     def pages_needed(self, total_len: int) -> int:
         return -(-total_len // self.page_size)
 
     def can_admit(self, total_len: int) -> bool:
         n = self.pages_needed(total_len)
-        return n <= min(self.available, self.max_pages_per_seq)
+        return n <= min(self.free_capacity, self.max_pages_per_seq)
 
     # -- primitive alloc/free --
     def alloc(self, n: int, *, slot: int | None = None) -> list[int]:
-        """Pop ``n`` pages off the free list; ``slot`` records ownership
-        (the release audit) when the pages join a live sequence."""
+        """Pop ``n`` pages off the free list, evicting cold cached
+        prefixes (LRU) first if the list is short — a live allocation
+        always outranks retained cache, which is what orders cache
+        eviction BEFORE §7 recompute preemption (the engine only
+        preempts on ``PagePoolExhausted``, and this never raises while
+        reclaimable cache remains). ``slot`` is accepted for historical
+        call sites; ownership is the refcount now."""
+        del slot
+        while n > len(self._free) and self.reclaimable > 0:
+            self._evict_one()
         if n > len(self._free):
             raise PagePoolExhausted(
                 f"need {n} pages, {len(self._free)} free"
             )
         ids = [self._free.pop() for _ in range(n)]
-        if slot is not None:
-            for p in ids:
-                self._owner[p] = slot
+        for p in ids:
+            self._ref[p] = self._ref.get(p, 0) + 1
         self.peak_pages_used = max(self.peak_pages_used, self.pages_used)
         return ids
 
+    def _incref(self, page: int) -> None:
+        if page not in self._ref:
+            raise PageAccountingError(
+                f"incref of page {page} with no live refcount"
+            )
+        self._ref[page] += 1
+
+    def _decref(self, page: int) -> None:
+        """THE decrement path (``release``, ``free`` and index eviction
+        all run through it): drop one reference, return the page to the
+        free list at zero. A page with no refcount is a double free —
+        typed error, shared neighbors stay intact."""
+        c = self._ref.get(page)
+        if c is None:
+            raise PageAccountingError(
+                f"double free: page {page} has no live refcount"
+            )
+        if c == 1:
+            del self._ref[page]
+            self._free.append(page)
+        else:
+            self._ref[page] = c - 1
+
+    def page_refs(self) -> dict[int, int]:
+        """page id -> refcount (auditor view)."""
+        return dict(self._ref)
+
     def release(self, slot: int) -> None:
-        """Return every page owned by ``slot`` to the pool, auditing
-        ownership page by page: a double release (slot already gone) or
-        a page whose recorded owner disagrees raises
+        """Drop ``slot``'s reference on every page it maps, freeing the
+        pages whose count hits zero: a double release (slot already
+        gone) or a page whose refcount already vanished raises
         ``PageAccountingError`` instead of corrupting the free list.
-        This is the path preemption uses to evict a live sequence.
-        """
+        This is the path preemption uses to evict a live sequence;
+        pages the prefix index retains survive it (count 2 -> 1). The
+        cache-reserve cap is enforced after the drop, so a drained
+        publisher can't leave the index pinning more of the pool than
+        ``cache_reserve_frac`` allows."""
         if slot not in self._seqs:
             raise PageAccountingError(
                 f"release of slot {slot} with no live sequence "
                 f"(double free or never admitted)"
             )
         seq = self._seqs.pop(slot)
-        for p in seq.pages:
-            owner = self._owner.pop(p, None)
-            if owner != slot:
-                raise PageAccountingError(
-                    f"page {p} freed by slot {slot} but owned by "
-                    f"{owner!r}"
-                )
-        self._free.extend(reversed(seq.pages))
+        for p in reversed(seq.pages):
+            self._decref(p)
+        self._enforce_reserve()
 
     def free(self, slot: int) -> None:
-        """Alias of ``release`` (the audited path is the only path)."""
+        """Alias of ``release`` (the refcounted path is the only path)."""
         self.release(slot)
+
+    # -- prefix index (DESIGN.md §10) --
+    def _touch(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def cached_pages(self) -> list[int]:
+        """Pages the prefix index currently retains (auditor view)."""
+        return sorted(self._px_page_key)
+
+    def match_prefix(self, prompt) -> PrefixMatch | None:
+        """Longest resident prefix of ``prompt``: walk the hash chain
+        over full pages, then probe the children of the last match for
+        a page whose leading rows cover the prompt's remainder (KV at a
+        position depends only on that position's token, so a longer
+        publisher's page serves any prompt that ends inside it — the
+        full-hit / copy-on-write case). Matched entries are LRU-bumped.
+        """
+        if not self.prefix_cache:
+            return None
+        toks = tuple(int(t) for t in np.asarray(prompt).ravel())
+        plen = len(toks)
+        ps = self.page_size
+        pages: list[int] = []
+        key = PREFIX_ROOT
+        nfull = 0
+        while (nfull + 1) * ps <= plen:
+            block = toks[nfull * ps:(nfull + 1) * ps]
+            k2 = chain_key(key, block)
+            e = self._px.get(k2)
+            if e is None or e.tokens != block:
+                break
+            e.last_use = self._touch()
+            pages.append(e.page)
+            key = k2
+            nfull += 1
+        tokens = nfull * ps
+        full = tokens == plen
+        if not full:
+            r = plen - tokens  # 1 <= r < ps
+            for ck in self._px_children.get(key, ()):
+                e = self._px.get(ck)
+                if e is not None and e.tokens[:r] == toks[tokens:]:
+                    e.last_use = self._touch()
+                    pages.append(e.page)
+                    tokens = plen
+                    full = True
+                    break
+        if tokens == 0:
+            return None
+        return PrefixMatch(pages=tuple(pages), tokens=tokens, full=full,
+                           key=key, full_pages=nfull)
+
+    def admit_plan(self, prompt_len: int, reserve: int,
+                   match: PrefixMatch | None) -> tuple[int, int]:
+        """(total pages, pages drawn from the free list) an admission
+        with this match needs — the admission-gate arithmetic, shared
+        with ``admit_prefix`` so they can never disagree."""
+        n = self.pages_needed(prompt_len + reserve)
+        if match is None:
+            return n, n
+        if match.full:
+            # pages before the divergence page map shared; the
+            # divergence page itself is drawn fresh (the COW copy dst)
+            div = (prompt_len - 1) // self.page_size
+            return n, n - div
+        return n, n - len(match.pages)
+
+    def admit_prefix(self, slot: int, prompt_len: int, *,
+                     reserve: int = 0,
+                     match: PrefixMatch | None = None) -> AdmitResult:
+        """Admit with a resident-prefix mapping (DESIGN.md §10).
+
+        Partial hit: the matched full pages join the sequence's table
+        shared (refcount bumped), fresh pages cover the remainder, and
+        the caller restarts chunked prefill at token
+        ``prefix_tokens``. Full hit: every prompt token is resident —
+        the pages BEFORE the divergence page (the one holding position
+        ``prompt_len - 1``) map shared, the divergence page is COPIED
+        into a fresh private page (``cow``: the engine performs the
+        single-page device copy before dispatching), and the sequence
+        starts at ``length = prompt_len - 1`` so the first decode step
+        re-feeds the last prompt token and emits the first generated
+        token with no prefill chunk at all. Exception-safe: on
+        ``PagePoolExhausted`` nothing is mapped or allocated.
+        """
+        if slot in self._seqs:
+            raise PageAccountingError(f"slot {slot} still occupied")
+        n, n_new = self.admit_plan(prompt_len, reserve, match)
+        if n > self.max_pages_per_seq:
+            raise ValueError(
+                f"request needs {n} pages > max_pages_per_seq "
+                f"{self.max_pages_per_seq}"
+            )
+        if match is None:
+            ids = self.alloc(n)
+            self._seqs[slot] = PagedSeq(pages=ids, length=prompt_len)
+            self.prefix_misses += 1 if self.prefix_cache else 0
+            return AdmitResult(pages=tuple(ids), prefix_tokens=0,
+                               full_hit=False, cow=None)
+        fresh = self.alloc(n_new)  # may evict; raises before any mapping
+        if match.full:
+            div = (prompt_len - 1) // self.page_size
+            mapped = list(match.pages[:div])
+            cow = (match.pages[div], fresh[0])
+            pages = mapped + fresh
+            length = prompt_len - 1
+            # never publish past the prompt: the COW page and everything
+            # after hold decode output
+            pub_pages, pub_key = len(pages), match.key
+        else:
+            mapped = list(match.pages)
+            cow = None
+            pages = mapped + fresh
+            length = prompt_len
+            pub_pages, pub_key = match.full_pages, match.key
+        for p in mapped:
+            self._incref(p)
+        self._seqs[slot] = PagedSeq(pages=pages, length=length,
+                                    pub_pages=pub_pages, pub_key=pub_key)
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += match.tokens
+        self.pages_deduped += len(mapped) + (1 if cow else 0)
+        self.cow_copies += 1 if cow else 0
+        self.peak_pages_used = max(self.peak_pages_used, self.pages_used)
+        return AdmitResult(pages=tuple(pages), prefix_tokens=match.tokens,
+                           full_hit=match.full, cow=cow)
+
+    def publish_prefix(self, slot: int, tokens) -> int:
+        """Register ``slot``'s freshly-written full prompt pages in the
+        index (called at chunk-write time with the prompt tokens
+        prefilled so far). Each published page gains an index reference
+        so it survives the sequence's release. Returns pages published
+        this call. A hash-chain collision (same key, different tokens)
+        stops publication — the resident entry wins, correctness is
+        never keyed on the digest alone."""
+        if not self.prefix_cache:
+            return 0
+        seq = self._seqs[slot]
+        toks = tuple(int(t) for t in np.asarray(tokens).ravel())
+        limit = min(len(toks) // self.page_size, len(seq.pages))
+        done = 0
+        while seq.pub_pages < limit:
+            i = seq.pub_pages
+            block = toks[i * self.page_size:(i + 1) * self.page_size]
+            key = chain_key(seq.pub_key, block)
+            e = self._px.get(key)
+            if e is not None:
+                if e.tokens != block:
+                    break  # collision: leave the resident entry alone
+                e.last_use = self._touch()
+            else:
+                page = seq.pages[i]
+                self._incref(page)
+                self._px[key] = _PrefixEntry(
+                    page=page, parent=seq.pub_key, tokens=block,
+                    last_use=self._touch())
+                self._px_children.setdefault(seq.pub_key, set()).add(key)
+                self._px_page_key[page] = key
+                done += 1
+            seq.pub_key = key
+            seq.pub_pages = i + 1
+        return done
+
+    def _evict_entry(self, key: bytes) -> None:
+        e = self._px.pop(key)
+        kids = self._px_children.get(e.parent)
+        if kids is not None:
+            kids.discard(key)
+            if not kids:
+                del self._px_children[e.parent]
+        del self._px_page_key[e.page]
+        self._decref(e.page)
+        self.prefix_evictions += 1
+
+    def _evict_one(self) -> None:
+        """Drop the LRU leaf entry, preferring one whose page only the
+        index holds (refcount 1 — evicting it frees a page now). A
+        live-shared leaf is evicted otherwise: that frees nothing
+        immediately but unpins interior entries, and since every pass
+        shrinks the index the reclaim loop in ``alloc`` terminates."""
+        best = None
+        best_cold = None
+        for key, e in self._px.items():
+            if self._px_children.get(key):
+                continue  # interior: children chain through it
+            if best is None or e.last_use < best[1].last_use:
+                best = (key, e)
+            if self._ref.get(e.page) == 1 and (
+                    best_cold is None
+                    or e.last_use < best_cold[1].last_use):
+                best_cold = (key, e)
+        pick = best_cold or best
+        if pick is None:  # no leaves -> index is empty (invariant)
+            raise PageAccountingError("prefix index has no evictable leaf")
+        self._evict_entry(pick[0])
+
+    def _enforce_reserve(self) -> None:
+        """Shrink the index until the pages it holds ALONE fit the
+        ``cache_reserve_frac`` budget. Live-shared cached pages don't
+        count — they cost nothing beyond the sequences using them."""
+        if not self.prefix_cache:
+            return
+        while self.reclaimable > self.reserve_pages:
+            self._evict_one()
+
+    def evict_cached_prefixes(self, n: int | None = None) -> int:
+        """Explicitly drop up to ``n`` cached-prefix entries (all, when
+        ``None``): the drain valve ``final_check`` and tests use to
+        prove retained cache is the ONLY thing left in the pool."""
+        done = 0
+        while self._px and (n is None or done < n):
+            self._evict_one()
+            done += 1
+        return done
 
     # -- sequence lifecycle --
     def admit(self, slot: int, prompt_len: int, *,
@@ -182,19 +548,11 @@ class PagedKVCacheManager:
         ``max_new_tokens`` reservation is the no-preemption admission
         policy; the engine may reserve less and run the pool hot, in
         which case ``append`` can raise ``PagePoolExhausted`` mid-decode
-        and the scheduler preempts (DESIGN.md §7).
+        and the scheduler preempts (DESIGN.md §7). Prefix-aware
+        admission is ``admit_prefix``; this path maps nothing shared.
         """
-        if slot in self._seqs:
-            raise PageAccountingError(f"slot {slot} still occupied")
-        n = self.pages_needed(prompt_len + reserve)
-        if n > self.max_pages_per_seq:
-            raise ValueError(
-                f"request needs {n} pages > max_pages_per_seq "
-                f"{self.max_pages_per_seq}"
-            )
-        ids = self.alloc(n, slot=slot)
-        self._seqs[slot] = PagedSeq(pages=ids, length=prompt_len)
-        return ids
+        return list(self.admit_prefix(slot, prompt_len,
+                                      reserve=reserve).pages)
 
     def append(self, slot: int) -> None:
         """Record one generated token; grow the table past the
@@ -207,7 +565,7 @@ class PagedKVCacheManager:
                 raise PagePoolExhausted(
                     f"slot {slot} exceeded max_pages_per_seq"
                 )
-            seq.pages.extend(self.alloc(1, slot=slot))
+            seq.pages.extend(self.alloc(1))
         seq.length += 1
 
     def ensure_capacity(self, slot: int, n: int) -> None:
@@ -226,7 +584,7 @@ class PagedKVCacheManager:
                 raise PagePoolExhausted(
                     f"slot {slot} exceeded max_pages_per_seq"
                 )
-            seq.pages.extend(self.alloc(need, slot=slot))
+            seq.pages.extend(self.alloc(need))
 
     def append_n(self, slot: int, n: int) -> None:
         """Record ``n`` generated tokens in ONE page-table update — the
@@ -246,11 +604,11 @@ class PagedKVCacheManager:
                 raise PagePoolExhausted(
                     f"slot {slot} exceeded max_pages_per_seq"
                 )
-            seq.pages.extend(self.alloc(need, slot=slot))
+            seq.pages.extend(self.alloc(need))
         seq.length += n
 
     def seq_pages(self, slot: int) -> list[int]:
-        """Physical page ids owned by ``slot`` (prompt-order)."""
+        """Physical page ids mapped by ``slot`` (prompt-order)."""
         return list(self._seqs[slot].pages)
 
     def owned_pages(self) -> dict[int, list[int]]:
@@ -260,6 +618,36 @@ class PagedKVCacheManager:
     def free_pages(self) -> list[int]:
         """Current free list (auditor view; LIFO order preserved)."""
         return list(self._free)
+
+    def prefix_integrity_check(self) -> None:
+        """Validate the index's internal invariants (auditor hook):
+        every entry's page is refcounted and back-linked, every
+        non-root entry chains to a live parent, and the children map
+        mirrors the entries exactly. Raises ``PageAccountingError``."""
+        for key, e in self._px.items():
+            if self._ref.get(e.page, 0) < 1:
+                raise PageAccountingError(
+                    f"index entry {key.hex()} holds page {e.page} with "
+                    f"no refcount")
+            if self._px_page_key.get(e.page) != key:
+                raise PageAccountingError(
+                    f"page {e.page} back-link disagrees with entry "
+                    f"{key.hex()}")
+            if e.parent != PREFIX_ROOT and e.parent not in self._px:
+                raise PageAccountingError(
+                    f"index entry {key.hex()} chains to a dead parent")
+            if key not in self._px_children.get(e.parent, ()):
+                raise PageAccountingError(
+                    f"parent of {key.hex()} does not list it as a child")
+        for parent, kids in self._px_children.items():
+            for k in kids:
+                if k not in self._px:
+                    raise PageAccountingError(
+                        f"children map names dead entry {k.hex()}")
+        if len(self._px_page_key) != len(self._px):
+            raise PageAccountingError(
+                f"{len(self._px)} index entries but "
+                f"{len(self._px_page_key)} page back-links")
 
     # -- device-facing views --
     def table(self) -> np.ndarray:

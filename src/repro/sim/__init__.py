@@ -12,6 +12,7 @@ from repro.sim.workload import (
     AttentionWorkload,
     ChunkedPrefillWorkload,
     PagedDecodeWorkload,
+    SharedPrefixWorkload,
     SpeculativeDecodeWorkload,
     PAPER_NETWORKS,
 )
@@ -21,7 +22,8 @@ from repro.sim.search import search_tiling
 
 __all__ = [
     "EDGE_HW", "HWConfig", "AttentionWorkload", "ChunkedPrefillWorkload",
-    "PagedDecodeWorkload", "SpeculativeDecodeWorkload", "PAPER_NETWORKS",
+    "PagedDecodeWorkload", "SharedPrefixWorkload",
+    "SpeculativeDecodeWorkload", "PAPER_NETWORKS",
     "simulate", "SimResult", "METHODS", "build_schedule", "Tiling",
     "search_tiling",
 ]

@@ -21,6 +21,7 @@ from repro.sim.workload import (
     AttentionWorkload,
     ChunkedPrefillWorkload,
     PagedDecodeWorkload,
+    SharedPrefixWorkload,
     SpeculativeDecodeWorkload,
 )
 
@@ -46,6 +47,12 @@ class Tiling:
     # SpeculativeDecodeWorkload as the SIXTH gene: fewer serial steps
     # vs. fatter MXU/VEC tiles, with the page DMA charged once either way.
     spec: int | None = None
+    # Pool fraction reserved for the shared-prefix cache (DESIGN.md §10).
+    # None -> sharing off (no reserve); searched for
+    # SharedPrefixWorkload as the SEVENTH gene: a resident prefix turns
+    # hit admissions into suffix-only prefills, but every reserved page
+    # shrinks the live pool and serializes decode into more rounds.
+    cache_frac: float | None = None
 
 
 def _effective_kv_bpe(w, t: Tiling, hw: HWConfig) -> int:
@@ -920,6 +927,201 @@ def build_chunked_prefill(w, t, hw) -> list[Task] | None:
     return tasks
 
 
+def build_shared_prefix(w, t, hw) -> list[Task] | None:
+    """Task graph for an admission wave with shared-prefix reuse (§10).
+
+    ``t.cache_frac`` reserves ``round(frac * pool_pages)`` pages for the
+    prefix index. The prefix is RESIDENT when the reserve covers its
+    full pages; hit admissions then resume chunked prefill at the first
+    non-resident token, so resident pages are charged gather-only page
+    DMA when read as attention context and are never recomputed or
+    written back (their MACs, softmax rows, Q traffic and K/V page
+    writes all disappear). Misses — and every request when the prefix
+    is not resident — pay the full admission.
+
+    The live pool is what the reserve leaves. Hit requests park their
+    prefix in the reserve, so concurrency = live pages over the wave's
+    mean per-request footprint, and the decode tail runs in
+    ``ceil(n_requests / concurrency)`` serial rounds: each round is a
+    chain of step barriers (the engine's single jitted dispatch) whose
+    (group x slots) MXU rows pad to the mesh edge, so narrower rounds
+    waste both array rows and barrier latency. The search therefore
+    prices reserve-for-reuse against concurrency-for-throughput; 0.0
+    (sharing off) stays in the space so it decides whether a reserve
+    pays at this hit rate.
+    """
+    page = min(t.nkv, w.prompt)
+    bpe = hw.bytes_per_elem
+    kv_bpe = _effective_kv_bpe(w, t, hw)
+    kv_quant = kv_bpe < bpe
+    heads_core = -(-w.heads // hw.cores)
+    hh = min(t.hh, heads_core)
+    n_head_tiles = -(-heads_core // hh)
+    g, e = w.group, w.emb
+
+    frac = t.cache_frac or 0.0
+    if not 0.0 <= frac < 1.0:
+        return None
+    reserve = round(frac * w.pool_pages)
+    prefix_pages = w.prefix // page      # only FULL pages are reusable
+    hit_tokens = prefix_pages * page
+    resident = 0 < prefix_pages <= reserve
+    eff_hit = w.hit_rate if resident else 0.0
+    n_hits = round(eff_hit * w.n_requests)
+    per_req = -(-(w.prompt + w.new_tokens) // page)
+    hit_req = per_req - (prefix_pages if resident else 0)
+    mean_req = (n_hits * hit_req
+                + (w.n_requests - n_hits) * per_req) / w.n_requests
+    live = w.pool_pages - reserve
+    concurrency = min(w.n_requests, int(live / mean_req))
+    if concurrency < 1:
+        return None  # the reserve ate the live pool
+
+    # Admission step size: the searched t.chunk when set (page-aligned,
+    # §5.6-feasible, like build_chunked_prefill), else the largest
+    # page-aligned chunk <= ~256 tokens that fits the L1 row buffer.
+    visible = -(-w.prompt // page) * page
+
+    def fits(c: int) -> bool:
+        rows = hh * g * c
+        need = (2 * rows * visible * bpe + hh * 4 * page * e * kv_bpe
+                + 2 * rows * e * bpe)
+        return need <= hw.l1_bytes
+
+    if t.chunk is not None:
+        chunk = min(t.chunk, w.prompt)
+        if (chunk % page and chunk != w.prompt) or not fits(chunk):
+            return None
+    else:
+        chunk = 0
+        c = min(w.prompt, page * max(1, 256 // page))
+        while c >= page:
+            if fits(c):
+                chunk = c
+                break
+            c -= page
+        if not chunk:
+            return None
+
+    dma_bpc = hw.dram_bytes_per_cycle / hw.cores
+    tasks: list[Task] = []
+
+    def emit(**kw) -> int:
+        tasks.append(Task(**kw))
+        return len(tasks) - 1
+
+    page_b = hh * page * e * kv_bpe + (hh * 4 if kv_quant else 0)
+
+    def dma_pages(n, deps=(), tag="", write=False) -> int:
+        nbytes = n * page_b
+        kw = {"dram_write_bytes" if write else "dram_read_bytes": nbytes}
+        return emit(unit="DMA",
+                    cycles=n * hw.dma_page_setup_cycles + nbytes / dma_bpc,
+                    deps=tuple(deps), tag=tag, l1_bytes=nbytes, **kw)
+
+    def mac(m, k, n, deps, tag) -> int:
+        return emit(unit="MAC", cycles=hh * hw.mac_cycles(m, k, n),
+                    deps=tuple(deps), tag=tag, mac_ops=hh * m * k * n,
+                    l1_bytes=(m * k + k * n + m * n) * hh * bpe)
+
+    # -- admission wave: hits resume at the first non-resident token --
+    prev: tuple[int, ...] = ()
+    for r in range(w.n_requests):
+        q0 = hit_tokens if r < n_hits else 0
+        while q0 < w.prompt:
+            clen = min(chunk, w.prompt - q0)
+            kv_len = q0 + clen
+            n_ctx = -(-kv_len // page)        # resident pages gather here
+            n_full = min((q0 + 1) // page, n_ctx)
+            rows_t = g * clen
+            rows = hh * rows_t
+            q_b = rows * e * bpe
+            sinks: list[int] = []
+            for ht in range(n_head_tiles):
+                qd = emit(unit="DMA", cycles=q_b / dma_bpc, deps=prev,
+                          tag=f"Q{r}.{q0}.{ht}", dram_read_bytes=q_b,
+                          l1_bytes=q_b)
+                kd = dma_pages(n_ctx, deps=prev, tag=f"K{r}.{q0}.{ht}")
+                cj = mac(rows_t, e, n_ctx * page, (qd, kd),
+                         f"C{r}.{q0}.{ht}")
+                cols = n_ctx * page
+                cyc = hw.vec_softmax_cycles(rows, cols)
+                ops = hw.vec_ops_softmax(rows, cols)
+                mask_elems = (n_ctx - n_full) * rows_t * page
+                cyc += mask_elems / hw.vec_lanes * hw.vec_ew_cost
+                ops += mask_elems
+                if kv_quant:
+                    cyc += 2 * rows * cols / hw.vec_lanes * hw.vec_ew_cost
+                    ops += 2 * rows * cols
+                p = emit(unit="VEC", cycles=cyc, deps=(cj,),
+                         tag=f"P{r}.{q0}.{ht}", vec_ops=ops,
+                         l1_bytes=2 * rows * cols * bpe)
+                vd = dma_pages(n_ctx, deps=prev, tag=f"V{r}.{q0}.{ht}")
+                oj = mac(rows_t, n_ctx * page, e, (p, vd),
+                         f"O{r}.{q0}.{ht}")
+                oo = emit(unit="DMA", cycles=q_b / dma_bpc, deps=(oj,),
+                          tag=f"Oout{r}.{q0}.{ht}", dram_write_bytes=q_b,
+                          l1_bytes=q_b)
+                # only the chunk's OWN pages are written — a hit never
+                # rewrites the resident prefix pages it resumed past
+                n_cp = -(-clen // page)
+                wdeps: tuple[int, ...] = prev
+                if kv_quant:
+                    elems = 2 * hh * clen * e
+                    wdeps = (emit(unit="VEC", tag=f"quant{r}.{q0}.{ht}",
+                                  deps=prev,
+                                  cycles=2 * elems / hw.vec_lanes
+                                  * hw.vec_ew_cost,
+                                  vec_ops=2 * elems,
+                                  l1_bytes=2 * elems * bpe),)
+                sinks += [oo] + [
+                    dma_pages(n_cp, deps=wdeps, tag=f"{which}w{r}.{q0}.{ht}",
+                              write=True) for which in ("K", "V")
+                ]
+            prev = tuple(sinks)
+            q0 += clen
+
+    # -- decode tail in serial rounds of ``concurrency`` slots --
+    kv_d = w.prompt + w.new_tokens
+    n_pd = -(-kv_d // page)
+    done = 0
+    while done < w.n_requests:
+        slots = min(concurrency, w.n_requests - done)
+        done += slots
+        dq_b = hh * g * slots * e * bpe
+        for st in range(w.new_tokens):
+            sinks = []
+            for ht in range(n_head_tiles):
+                qd = emit(unit="DMA", cycles=dq_b / dma_bpc, deps=prev,
+                          tag=f"dQ{done}.{st}.{ht}", dram_read_bytes=dq_b,
+                          l1_bytes=dq_b)
+                kd = dma_pages(slots * n_pd, deps=prev,
+                               tag=f"dK{done}.{st}.{ht}")
+                sj = mac(g * slots, e, n_pd * page, (qd, kd),
+                         f"dS{done}.{st}.{ht}")
+                dcols = n_pd * page
+                drows = hh * g * slots
+                dcyc = hw.vec_softmax_cycles(drows, dcols)
+                dops = hw.vec_ops_softmax(drows, dcols)
+                if kv_quant:
+                    dcyc += (2 * drows * dcols / hw.vec_lanes
+                             * hw.vec_ew_cost)
+                    dops += 2 * drows * dcols
+                pj = emit(unit="VEC", cycles=dcyc, deps=(sj,),
+                          tag=f"dP{done}.{st}.{ht}", vec_ops=dops,
+                          l1_bytes=2 * drows * dcols * bpe)
+                vd = dma_pages(slots * n_pd, deps=prev,
+                               tag=f"dV{done}.{st}.{ht}")
+                aj = mac(g * slots, n_pd * page, e, (pj, vd),
+                         f"dA{done}.{st}.{ht}")
+                sinks.append(
+                    emit(unit="DMA", cycles=dq_b / dma_bpc, deps=(aj,),
+                         tag=f"dO{done}.{st}.{ht}", dram_write_bytes=dq_b,
+                         l1_bytes=dq_b))
+            prev = tuple(sinks)
+    return tasks
+
+
 _BUILDERS = {
     "mas": build_mas,
     "flat": build_flat,
@@ -930,6 +1132,7 @@ _BUILDERS = {
     "paged_decode": build_paged_decode,
     "chunked_prefill": build_chunked_prefill,
     "speculative_decode": build_speculative_decode,
+    "shared_prefix": build_shared_prefix,
 }
 
 
@@ -959,6 +1162,12 @@ def tiling_space(w: AttentionWorkload, hw: HWConfig) -> list[Tiling]:
     factor (DESIGN.md §9): candidate rows per verify step, searched
     jointly with page size and precision, with k=1 (plain decode) in
     the space so the search decides whether speculation pays.
+
+    Shared-prefix workloads add the CACHE-RESERVE FRACTION as a seventh
+    factor (DESIGN.md §10): the pool slice parked under the prefix
+    index, searched jointly with page size and precision, with 0.0
+    (sharing off) in the space so the search decides whether a reserve
+    pays at the workload's hit rate.
     """
     heads_core = -(-w.heads // hw.cores)
     hhs = sorted({h for h in (1, 2, 4, 8, 16) if h <= heads_core}
@@ -977,6 +1186,19 @@ def tiling_space(w: AttentionWorkload, hw: HWConfig) -> list[Tiling]:
         return [Tiling(hh, 1, p, bpe, c)
                 for hh in hhs for p in pages for bpe in bpes
                 for c in chunks]
+    if isinstance(w, SharedPrefixWorkload):
+        # Reserve schedule: the CACHE-RESERVE FRACTION joins page size,
+        # kv-head tile and precision as the searched factors. 0.0
+        # (sharing off) stays in the space; fractions above it trade
+        # resident-prefix reuse against live-pool concurrency, so the
+        # optimum moves with the workload's hit rate.
+        pages = sorted({p for p in (16, 32, 64, 128) if p <= w.prompt}
+                       | ({w.prompt} if w.prompt <= 128 else set()))
+        bpes = sorted({hw.bytes_per_elem, 1})
+        fracs = (0.0, 0.125, 0.25, 0.375, 0.5, 0.75)
+        return [Tiling(hh, 1, p, bpe, None, None, f)
+                for hh in hhs for p in pages for bpe in bpes
+                for f in fracs]
     if isinstance(w, SpeculativeDecodeWorkload):
         # Verify schedule: the SPECULATION DEPTH joins page size, kv-head
         # tile and precision as the sixth factor (DESIGN.md §9). k=1 is

@@ -271,6 +271,80 @@ class ChunkedPrefillWorkload:
         return -(-self.prompt // chunk)
 
 
+@dataclasses.dataclass(frozen=True)
+class SharedPrefixWorkload:
+    """An admission wave over a pool with shared-prefix reuse (§10).
+
+    ``n_requests`` prompts of ``prompt`` tokens arrive, a ``hit_rate``
+    fraction of them opening with the same ``prefix`` tokens (the
+    common system prompt). The pool holds ``pool_pages`` pages and
+    ``Tiling.cache_frac`` reserves a slice of it for the prefix index.
+    When the reserve covers the prefix's FULL pages the prefix is
+    resident: hit admissions resume chunked prefill at the first
+    non-resident token — the resident pages are only GATHERED (page
+    DMA) as attention context, never recomputed or rewritten — and
+    their shared pages stop counting against the live pool. The cost:
+    every reserved page shrinks live-decode concurrency, so the decode
+    tail runs in more serial rounds of narrower (MXU-padded) steps.
+    That reserve-for-reuse vs concurrency-for-throughput trade is what
+    the SEVENTH search factor prices (DESIGN.md §10).
+    """
+
+    name: str
+    heads: int
+    emb: int
+    prompt: int                   # tokens per request (prefix + suffix)
+    prefix: int                   # shared leading tokens
+    pool_pages: int               # host pool size (scratch excluded)
+    n_requests: int = 4
+    hit_rate: float = 0.5         # fraction arriving with the prefix
+    new_tokens: int = 8           # decode tokens per request
+    group: int = 1
+    kv_bpe: int | None = None
+
+    def __post_init__(self):
+        if not 0 <= self.prefix <= self.prompt:
+            raise ValueError("prefix must lie within the prompt")
+        if not 0.0 <= self.hit_rate <= 1.0:
+            raise ValueError("hit_rate must be a probability")
+
+    @property
+    def batch(self) -> int:
+        return self.n_requests
+
+    @property
+    def seq(self) -> int:
+        """Anchors the tiling search space (page cap)."""
+        return self.prompt
+
+    @property
+    def _prefill_elems(self) -> int:
+        """Useful score elements across the wave assuming FULL prefix
+        reuse for hits (lower bound — page granularity rounds the
+        actual reuse down to whole pages)."""
+        tri = self.prompt * (self.prompt + 1) // 2
+        hit_tri = tri - self.prefix * (self.prefix + 1) // 2
+        n_hits = round(self.hit_rate * self.n_requests)
+        return n_hits * hit_tri + (self.n_requests - n_hits) * tri
+
+    @property
+    def _decode_elems(self) -> int:
+        return self.n_requests * self.new_tokens * (
+            self.prompt + self.new_tokens)
+
+    @property
+    def mac_ops(self) -> int:
+        """Useful MACs: QK^T + PV over the wave's prefills (hits skip
+        their resident prefix rows) plus the decode tail."""
+        return 2 * self.heads * self.group * self.emb * (
+            self._prefill_elems + self._decode_elems)
+
+    @property
+    def softmax_elems(self) -> int:
+        return self.heads * self.group * (
+            self._prefill_elems + self._decode_elems)
+
+
 def serving_phase_workloads(name: str, prompt_lens, max_new: int, *,
                             heads: int, emb: int, group: int = 1,
                             batch: int = 4, kv_bpe: int | None = None,
