@@ -32,6 +32,15 @@ machine-normalized like the others) — is guarded by
 paying (DESIGN.md §10). Baselines missing the key (pre-prefix-cache)
 skip it.
 
+``shard_ratio`` — the multi-chip scenario's best sharded tokens/s over
+the single-chip tokens/s of the same process (DESIGN.md §11; written by
+``serving_throughput.py --sharded`` under forced host devices) — is
+guarded by ``--shard-threshold``. The forced "chips" time-share one
+CPU, so the ratio sits below 1.0 by construction and swings with
+collective overhead more than the other ratios; the guard catches a
+sharded dispatch path that falls off a cliff, not small drifts.
+Baselines missing the key (pre-multi-chip) skip it.
+
 ``--spec-baseline/--spec-current BENCH_spec.json`` guard the
 speculative-decoding benchmark (DESIGN.md §9) the same way: the
 simulated speedup of the searched speculation depth over the k=1
@@ -156,6 +165,9 @@ def main() -> int:
     ap.add_argument("--prefix-threshold", type=float, default=0.35,
                     help="max fractional drop allowed in the shared-"
                          "prefix hit-vs-cold p50 TTFT ratio")
+    ap.add_argument("--shard-threshold", type=float, default=0.35,
+                    help="max fractional drop allowed in the sharded/"
+                         "single-chip tokens/s ratio")
     ap.add_argument("--metrics", type=Path, default=None,
                     help="metrics-registry JSON from the traced serving "
                          "pass; consistency-checked against CURRENT.json")
@@ -268,6 +280,24 @@ def main() -> int:
     else:
         print("bench-guard: no prefix_ttft_ratio in one of the files; "
               "skipping shared-prefix guard")
+
+    # multi-chip serving (DESIGN.md §11): best sharded tokens/s over
+    # single-chip tokens/s, same process. Missing in pre-multi-chip
+    # baselines: skip.
+    b_sh = base.get("shard_ratio")
+    c_sh = cur.get("shard_ratio")
+    if b_sh and c_sh is not None:
+        sh_drop = 1.0 - c_sh / b_sh
+        print(f"bench-guard: sharded/single-chip tokens/s ratio: "
+              f"{b_sh:.2f}x -> {c_sh:.2f}x ({-sh_drop:+.1%})")
+        if sh_drop > args.shard_threshold:
+            print(f"bench-guard: shard ratio dropped {sh_drop:.1%} > "
+                  f"{args.shard_threshold:.0%} vs committed baseline",
+                  file=sys.stderr)
+            return 1
+    else:
+        print("bench-guard: no shard_ratio in one of the files; "
+              "skipping shard guard")
 
     if args.metrics is not None:
         metrics = json.loads(args.metrics.read_text())

@@ -256,6 +256,66 @@ def tune_cache_reserve(*, pool_pages: int, page: int, slots: int,
     return prefix_pages / pool_pages
 
 
+# Interconnect defaults for the closed-form shard tuner: per-hop launch
+# latency and per-direction ring bandwidth of a small accelerator mesh
+# (the sim's edge-scale analogue lives in sim/hw.py: link_gbps /
+# link_setup_cycles).
+LINK_GBPS = 75.0
+LINK_SETUP_S = 2e-6
+
+
+@functools.lru_cache(maxsize=1024)
+def tune_shard_degree(*, heads_kv: int, group: int, n_ctx: int, e: int,
+                      batch: int = 4, itemsize: int = 2, page: int = 16,
+                      kv_itemsize: int | None = None,
+                      link_gbps: float = LINK_GBPS,
+                      link_setup_s: float = LINK_SETUP_S,
+                      max_shard: int = 8) -> int:
+    """Engine-default mesh shard degree for KV-head-sharded serving
+    (DESIGN.md §11) — "how many chips before the collective dominates."
+
+    Each of ``s`` chips owns ``heads_kv / s`` KV heads of the paged
+    pool, so a decode step's MXU / page-DMA / VPU streams all shrink by
+    the shard degree — but every step ends with a ring all-gather of
+    the per-head attention outputs before the replicated output
+    projection: ``s - 1`` serial hops, each paying ``link_setup_s``
+    plus one chip's output slice over ``link_gbps``. The analytical
+    objective is the per-step cost
+
+        max(mxu/s, hbm/s, vpu/s) + overhead + (s-1) * hop(s)
+
+    minimized over the degrees in [1, max_shard] that divide
+    ``heads_kv`` (the pool's Hkv axis is the shard dim). Long contexts
+    and fat links buy chips; a near-zero link collapses to 1. The
+    sim's tiling search treats the same degree as its eighth gene;
+    this closed form is the engine default when none is given.
+    """
+    kv_item = itemsize if kv_itemsize is None else kv_itemsize
+    pages_seq = -(-n_ctx // page)
+    # one step's full gather: every chip ends holding (batch, Hq, E)
+    gather_bytes = batch * heads_kv * group * e * itemsize
+    best_s, best_cost = 1, math.inf
+    for s in range(1, max(1, max_shard) + 1):
+        if heads_kv % s:
+            continue
+        h_loc = heads_kv // s
+        rows = batch * h_loc * group
+        mxu = 4.0 * rows * n_ctx * e / MXU_FLOPS
+        kv_b = 2 * batch * h_loc * pages_seq * page * e * kv_item
+        if kv_item < itemsize:
+            kv_b += 2 * batch * h_loc * pages_seq * 4  # fp32 page scales
+        hbm = (kv_b + 2 * rows * e * itemsize) / HBM_BW
+        vpu = 6.0 * rows * n_ctx / VPU_FLOPS
+        if kv_item < itemsize:
+            vpu += 2.0 * rows * n_ctx / VPU_FLOPS
+        link = (s - 1) * (link_setup_s
+                          + (gather_bytes / s) / (link_gbps * 1e9))
+        cost = max(mxu, hbm, vpu) + CHUNK_STEP_OVERHEAD_S + link
+        if cost < best_cost:
+            best_s, best_cost = s, cost
+    return best_s
+
+
 @functools.lru_cache(maxsize=1024)
 def tune_attention(*, b_h: int, n_q: int, n_kv: int, e: int,
                    itemsize: int = 2,

@@ -54,6 +54,31 @@ def sharding_policy(mesh, kind: str = "tp_sp"):
         _state.kind = prev_kind
 
 
+@contextlib.contextmanager
+def kv_shard(mesh, axis: str = "model"):
+    """Activate KV-head sharding for the paged serving dispatchers.
+
+    While active, ``models.attention.paged_*`` constrain the page pools
+    and per-head intermediates onto ``axis`` of ``mesh`` (decode /
+    verify) and route chunked prefill through the head-block ring
+    (``distributed.paged.ring_paged_prefill``). The state is consulted
+    at TRACE time, so the serving engine wraps its jitted step closures'
+    first call (i.e. ``serve()``) in this context (DESIGN.md §11). With
+    no active state every dispatch is the stock single-chip path.
+    """
+    prev = getattr(_state, "kv_shard", None)
+    _state.kv_shard = (mesh, axis)
+    try:
+        yield
+    finally:
+        _state.kv_shard = prev
+
+
+def kv_shard_state():
+    """(mesh, axis) while inside ``kv_shard``; None otherwise."""
+    return getattr(_state, "kv_shard", None)
+
+
 def batch_axes() -> tuple[str, ...]:
     axes = _axes() or {}
     names = ("pod", "data", "model") if policy_kind() == "fsdp" else (

@@ -147,21 +147,43 @@ def batch_specs(mesh: Mesh, *, with_frontend=False) -> dict:
     return out
 
 
-def cache_specs(cache, mesh: Mesh) -> object:
-    """Sequence-sharded KV caches; recurrent states batch-sharded."""
+def cache_specs(cache, mesh: Mesh, *, layout: str = "dense") -> object:
+    """Cache PartitionSpecs for both cache layouts.
+
+    ``layout="dense"``: sequence-sharded KV waves (B, Hkv, S, E);
+    recurrent states batch-sharded. ``layout="paged"``: the serving
+    engine's global page pools (Hkv, P, page, E) are KV-HEAD-sharded
+    over 'model' — page identity must stay chip-local (a page holds
+    every head's rows for its token span only within one head shard),
+    so the Hkv-leading axis is the only shardable dim; the int8 scale
+    side-tables (Hkv, P) shard with their pools. The two layouts cannot
+    be told apart by shape (stacked dense k/v and stacked paged k/v are
+    both ndim-5), hence the explicit kwarg.
+    """
     ba = batch_axes(mesh)
 
-    def spec_for(path: str, leaf) -> P:
+    def spec_dense(path: str, leaf) -> tuple:
         if re.search(r"(^|/)(k|v|mem_k|mem_v)$", path):
-            s = (ba, None, "model", None)         # (B, Hkv, S, E)
-        elif path.endswith("conv"):
-            s = (ba, None, "model")               # (B, K, C) channels TP
-        elif path.endswith("rnn"):
-            s = (ba, "model")                     # (B, W)
-        elif path.endswith("state"):
-            s = (ba, "model", None, None)         # (B, H, P, N)
-        else:
-            s = (ba,)
+            return (ba, None, "model", None)      # (B, Hkv, S, E)
+        if path.endswith("conv"):
+            return (ba, None, "model")            # (B, K, C) channels TP
+        if path.endswith("rnn"):
+            return (ba, "model")                  # (B, W)
+        if path.endswith("state"):
+            return (ba, "model", None, None)      # (B, H, P, N)
+        return (ba,)
+
+    def spec_paged(path: str, leaf) -> tuple:
+        if re.search(r"(^|/)(k|v)$", path):
+            return ("model", None, None, None)    # (Hkv, P, page, E)
+        if re.search(r"(k|v)_scale$", path):
+            return ("model", None)                # (Hkv, P)
+        return ()
+
+    spec_raw = {"dense": spec_dense, "paged": spec_paged}[layout]
+
+    def spec_for(path: str, leaf) -> P:
+        s = spec_raw(path, leaf)
         stacked = path.startswith("units/")
         s = s[: leaf.ndim - (1 if stacked else 0)]
         return P(None, *s) if stacked else P(*s)

@@ -37,6 +37,30 @@ def _repeat_kv(x, n_rep):
     ).reshape(b, h * n_rep, n, e)
 
 
+def _kv_shard_constrainers():
+    """(head_constrain, replicate) while ``ctx.kv_shard`` is active.
+
+    The paged XLA twins call these at their DESIGN.md §11 cut points:
+    page pools and per-head intermediates constrained onto the mesh's
+    KV-head axis (every op in between is per-(batch, kv-head) local, so
+    GSPMD runs the step shard-local), and the attention output
+    constrained replicated — one pure-data-movement all-gather before
+    the output projection, never a cross-shard partial-sum all-reduce,
+    so the sharded argmax is bitwise the single-chip argmax. Returns
+    None (stock path) when no kv-shard state is active.
+    """
+    from repro.distributed import ctx
+
+    st = ctx.kv_shard_state()
+    if st is None:
+        return None
+    from repro.distributed import paged as dpaged
+
+    mesh, axis = st
+    return (lambda x, dim=0: dpaged.head_sharded(x, mesh, axis, dim),
+            lambda x: dpaged.replicated(x, mesh))
+
+
 def xla_full_attention(q, k, v, *, causal, window=None, q_offset=0):
     return kref.attention(q, k, v, causal=causal, window=window,
                           q_offset=q_offset)
@@ -164,14 +188,21 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens, *,
     b, hq, e = q.shape
     hkv, _, page, _ = k_pages.shape
     g = hq // hkv
+    cs = _kv_shard_constrainers()
+    if cs is not None:
+        k_pages, v_pages = cs[0](k_pages), cs[0](v_pages)
     # (Hkv, B, max_pages, page, E) -> (B, Hkv, max_pages*page, E)
     k = jnp.moveaxis(k_pages[:, page_table], 0, 1).reshape(b, hkv, -1, e)
     v = jnp.moveaxis(v_pages[:, page_table], 0, 1).reshape(b, hkv, -1, e)
+    if cs is not None:
+        k, v = cs[0](k, 1), cs[0](v, 1)
     s = k.shape[2]
     qg = q.reshape(b, hkv, g, e)
     scale = e**-0.5
     sc = jnp.einsum("bkge,bkse->bkgs", qg.astype(jnp.float32),
                     k.astype(jnp.float32)) * scale
+    if cs is not None:
+        sc = cs[0](sc, 1)
 
     def per_position(scales):
         # (Hkv, P) per-page scales -> (B, Hkv, S) per-position factors
@@ -188,7 +219,8 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, kv_lens, *,
     if v_scales is not None:
         p = p * per_position(v_scales)[:, :, None, :]
     o = jnp.einsum("bkgs,bkse->bkge", p, v.astype(jnp.float32))
-    return (o / l).reshape(b, hq, e).astype(q.dtype)
+    out = (o / l).reshape(b, hq, e).astype(q.dtype)
+    return out if cs is None else cs[1](out)
 
 
 def paged_verify_attention(q, k_pages, v_pages, page_table, kv_lens,
@@ -217,8 +249,13 @@ def paged_verify_attention(q, k_pages, v_pages, page_table, kv_lens,
     b, spec, hq, e = q.shape
     hkv, _, page, _ = k_pages.shape
     g = hq // hkv
+    cs = _kv_shard_constrainers()
+    if cs is not None:
+        k_pages, v_pages = cs[0](k_pages), cs[0](v_pages)
     k = jnp.moveaxis(k_pages[:, page_table], 0, 1).reshape(b, hkv, -1, e)
     v = jnp.moveaxis(v_pages[:, page_table], 0, 1).reshape(b, hkv, -1, e)
+    if cs is not None:
+        k, v = cs[0](k, 1), cs[0](v, 1)
     s = k.shape[2]
     # (B, Hkv, k, G, E): query heads grouped under their kv head, the
     # speculative positions forming the short Q block.
@@ -226,6 +263,8 @@ def paged_verify_attention(q, k_pages, v_pages, page_table, kv_lens,
     scale = e**-0.5
     sc = jnp.einsum("bkpge,bkse->bkpgs", qg.astype(jnp.float32),
                     k.astype(jnp.float32)) * scale
+    if cs is not None:
+        sc = cs[0](sc, 1)
 
     def per_position(scales):
         gathered = jnp.moveaxis(scales[:, page_table], 0, 1)
@@ -244,8 +283,9 @@ def paged_verify_attention(q, k_pages, v_pages, page_table, kv_lens,
     if v_scales is not None:
         p = p * per_position(v_scales)[:, :, None, None, :]
     o = jnp.einsum("bkpgs,bkse->bkpge", p, v.astype(jnp.float32))
-    return ((o / l).transpose(0, 2, 1, 3, 4)
-            .reshape(b, spec, hq, e).astype(q.dtype))
+    out = ((o / l).transpose(0, 2, 1, 3, 4)
+           .reshape(b, spec, hq, e).astype(q.dtype))
+    return out if cs is None else cs[1](out)
 
 
 def paged_prefill_attention(q, k_pages, v_pages, page_table, q_offset,
@@ -270,6 +310,19 @@ def paged_prefill_attention(q, k_pages, v_pages, page_table, q_offset,
                                             q_offset, kv_len,
                                             k_scales=k_scales,
                                             v_scales=v_scales)
+    from repro.distributed import ctx
+
+    st = ctx.kv_shard_state()
+    if st is not None:
+        # head-sharded pool: chunked prefill runs as ring attention over
+        # the page gather (DESIGN.md §11) — head-block slabs rotate, Q
+        # chunk rows shard, three-band masking per hop
+        from repro.distributed import paged as dpaged
+
+        return dpaged.ring_paged_prefill(q, k_pages, v_pages, page_table,
+                                         q_offset, kv_len, st[0],
+                                         axis=st[1], k_scales=k_scales,
+                                         v_scales=v_scales)
     hq, chunk, e = q.shape
     hkv, _, page, _ = k_pages.shape
     k = k_pages[:, page_table].reshape(hkv, -1, e)  # (Hkv, S, E)

@@ -18,6 +18,10 @@ from repro.serving.lifecycle import (
     RequestState,
     validate_request,
 )
+from repro.serving.sharded import (
+    LeastLoadedRouter,
+    ShardedContinuousBatchingEngine,
+)
 from repro.serving.paged_cache import (
     AdmitResult,
     PageAccountingError,
@@ -31,6 +35,8 @@ from repro.serving.paged_cache import (
 __all__ = [
     "ServingEngine",
     "ContinuousBatchingEngine",
+    "ShardedContinuousBatchingEngine",
+    "LeastLoadedRouter",
     "NgramDrafter",
     "Request",
     "RequestRecord",

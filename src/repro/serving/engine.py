@@ -580,6 +580,20 @@ class ContinuousBatchingEngine:
 
             self._verify = jax.jit(verify_step)
 
+    def _make_cache(self):
+        """Build the serve() paged cache. The sharded engine overrides
+        this to place the page pools onto its mesh (DESIGN.md §11)."""
+        return self.model.make_cache(
+            self.batch_size, self.max_len, cache_layout="paged",
+            page_size=self.page_size, num_pages=self.num_pages,
+            kv_dtype=self.kv_dtype)
+
+    def _observe_step(self, kind: str, t0: float, t1: float,
+                      chunk_tokens: int, live: int) -> None:
+        """Per-step observability hook, called once per engine step
+        after the host sync. No-op here; the sharded engine emits
+        per-shard span tracks and shard.* metrics from it."""
+
     def kv_bytes_per_page(self) -> int:
         cfg = self.cfg
         return page_footprint_bytes(
@@ -651,9 +665,7 @@ class ContinuousBatchingEngine:
                                   prefix_cache=self.prefix_cache,
                                   cache_reserve_frac=self.cache_reserve_frac)
         self._mgr = mgr  # auditable by tests while serve() is live
-        cache = self.model.make_cache(B, self.max_len, cache_layout="paged",
-                                      page_size=ps, num_pages=self.num_pages,
-                                      kv_dtype=self.kv_dtype)
+        cache = self._make_cache()
         self.step_log = []
         self.results = {}
         self._cancel_req = set()
@@ -1054,6 +1066,9 @@ class ContinuousBatchingEngine:
             now = time.perf_counter()
             m_sync.observe(now - t_disp)
             m_step_kind[kind].observe(now - t_step0)
+            self._observe_step(kind, t_step0, now,
+                               clen if pending is not None else 0,
+                               len(active))
             if tracing:
                 # step span split: host-side pack + async dispatch vs
                 # the device->host sync that rides the step's transfer

@@ -13,6 +13,7 @@ from repro.sim.workload import (
     ChunkedPrefillWorkload,
     PagedDecodeWorkload,
     SharedPrefixWorkload,
+    ShardedServingWorkload,
     SpeculativeDecodeWorkload,
     PAPER_NETWORKS,
 )
@@ -23,7 +24,8 @@ from repro.sim.search import search_tiling
 __all__ = [
     "EDGE_HW", "HWConfig", "AttentionWorkload", "ChunkedPrefillWorkload",
     "PagedDecodeWorkload", "SharedPrefixWorkload",
-    "SpeculativeDecodeWorkload", "PAPER_NETWORKS",
+    "ShardedServingWorkload", "SpeculativeDecodeWorkload",
+    "PAPER_NETWORKS",
     "simulate", "SimResult", "METHODS", "build_schedule", "Tiling",
     "search_tiling",
 ]

@@ -33,6 +33,15 @@ class HWConfig:
     # optimum (sim/schedules.build_paged_decode).
     dma_page_setup_cycles: float = 64.0
 
+    # Chip-to-chip interconnect stream (DESIGN.md §11): ring/all-gather
+    # hops of a multi-chip serving mesh are charged on a fourth "LINK"
+    # stream — per-hop setup cycles (descriptor + synchronization, the
+    # analogue of dma_page_setup_cycles) plus payload bytes over the
+    # link bandwidth. The knob that gives the shard-degree search its
+    # interior optimum (sim/schedules.build_sharded_serving).
+    link_gbps: float = 16.0
+    link_setup_cycles: float = 512.0
+
     # VEC microcosts (cycles per 256-wide vector op). exp dominates:
     # range reduction + polynomial + reconstruction on 16-bit lanes.
     vec_exp_cost: float = 48.0
@@ -53,6 +62,10 @@ class HWConfig:
     @property
     def dram_bytes_per_cycle(self) -> float:
         return self.dram_gbps / self.freq_ghz
+
+    @property
+    def link_bytes_per_cycle(self) -> float:
+        return self.link_gbps / self.freq_ghz
 
     def mac_cycles(self, m: int, k: int, n: int) -> float:
         """Cycles for an (m,k)x(k,n) matmul on one core's 16x16 mesh.

@@ -22,6 +22,7 @@ from repro.sim.workload import (
     ChunkedPrefillWorkload,
     PagedDecodeWorkload,
     SharedPrefixWorkload,
+    ShardedServingWorkload,
     SpeculativeDecodeWorkload,
 )
 
@@ -53,6 +54,11 @@ class Tiling:
     # hit admissions into suffix-only prefills, but every reserved page
     # shrinks the live pool and serializes decode into more rounds.
     cache_frac: float | None = None
+    # Mesh shard degree — chips the KV heads split across (DESIGN.md
+    # §11). None -> single chip; searched for ShardedServingWorkload as
+    # the EIGHTH gene: per-chip compute/DMA shrink vs the per-step ring
+    # all-gather on the LINK stream (hw.link_gbps / link_setup_cycles).
+    shard: int | None = None
 
 
 def _effective_kv_bpe(w, t: Tiling, hw: HWConfig) -> int:
@@ -747,6 +753,128 @@ def build_speculative_decode(w, t, hw) -> list[Task] | None:
 
 
 # ---------------------------------------------------------------------------
+# Sharded serving: per-chip paged decode + per-step ring all-gather on the
+# LINK stream; serial steps so the collective gates the next step.
+# ---------------------------------------------------------------------------
+
+
+def build_sharded_serving(w, t, hw) -> list[Task] | None:
+    """Task graph for ONE CHIP of a KV-head-sharded serving mesh
+    (ShardedServingWorkload, DESIGN.md §11).
+
+    ``t.shard`` is the SHARD DEGREE — the eighth searchable factor
+    (falls back to the workload pin, then 1) — ``t.nkv`` the page size,
+    ``t.hh`` the kv-head tile, ``t.kv_bpe`` the KV element width;
+    ``t.nq``/``t.chunk``/``t.spec``/``t.cache_frac`` are ignored. The
+    chip owns ``heads / shard`` KV heads of the paged pool, so each of
+    the ``w.n_steps`` serial decode steps emits the per-chip slice of
+    ``build_paged_decode``'s page-walk pipeline, then ``shard - 1``
+    serial ring hops on the LINK stream (per hop:
+    ``hw.link_setup_cycles`` + one chip's head-output slice over
+    ``hw.link_gbps``) that every next-step task depends on — the
+    replicated output projection cannot start until the all-gather
+    lands. Sharding therefore buys per-chip MAC/VEC/DMA shrink (until
+    ``heads/shard`` drops below the chip's core count and the split
+    plateaus) at per-step collective growth, which is exactly the
+    "how many chips before the collective dominates" trade the search
+    resolves: near-zero ``link_gbps`` collapses to one chip, fat links
+    buy chips until the plateau.
+    """
+    page = min(t.nkv, w.seq)
+    shard = t.shard or w.shard or 1
+    if shard < 1 or w.heads % shard:
+        return None  # degree must divide the KV heads
+    heads_chip = w.heads // shard
+    heads_core = -(-heads_chip // hw.cores)
+    hh = min(t.hh, heads_core)
+    bpe = hw.bytes_per_elem
+    kv_bpe = _effective_kv_bpe(w, t, hw)
+    kv_quant = kv_bpe < bpe
+    g, e = w.group, w.emb
+    # L1: Q + O + double-buffered K/V pages + the (g, page) score tile
+    need = (hh * (2 * g * e + 2 * g * page) * bpe
+            + hh * 4 * page * e * kv_bpe)
+    if need > hw.l1_bytes:
+        return None
+
+    dma_bpc = hw.dram_bytes_per_cycle / hw.cores
+    link_bpc = hw.link_bytes_per_cycle
+    tasks: list[Task] = []
+
+    def emit(**kw) -> int:
+        tasks.append(Task(**kw))
+        return len(tasks) - 1
+
+    def dma_page(nbytes, deps=(), tag=""):
+        return emit(unit="DMA",
+                    cycles=hw.dma_page_setup_cycles + nbytes / dma_bpc,
+                    deps=tuple(deps), tag=tag, dram_read_bytes=nbytes,
+                    l1_bytes=nbytes)
+
+    page_b = hh * page * e * kv_bpe + (hh * 4 if kv_quant else 0)
+    q_b = hh * g * e * bpe
+    # one ring hop moves one chip's slice of the (batch, Hq, E) head
+    # outputs; shard - 1 hops land the full gather on every chip
+    hop_b = w.gather_bytes(shard) // max(1, shard - 1) if shard > 1 else 0
+
+    prev_step: tuple[int, ...] = ()
+    for st in range(w.n_steps):
+        step_sinks: list[int] = []
+        for s, kv_len in enumerate(w.kv_lens):
+            n_pages = -(-kv_len // page)
+            for ht in range(-(-heads_core // hh)):
+                qd = emit(unit="DMA", cycles=q_b / dma_bpc, deps=prev_step,
+                          tag=f"Q{st}.{s}.{ht}", dram_read_bytes=q_b,
+                          l1_bytes=q_b)
+                prev_acc = None
+                for j in range(n_pages):
+                    kd = dma_page(page_b, deps=prev_step,
+                                  tag=f"K{st}.{s}.{ht}.{j}")
+                    sj = emit(unit="MAC",
+                              cycles=hh * hw.mac_cycles(g, e, page),
+                              deps=(qd, kd), tag=f"S{st}.{s}.{ht}.{j}",
+                              mac_ops=hh * g * page * e,
+                              l1_bytes=(g * e + page * e + g * page)
+                              * hh * bpe)
+                    # partial softmax + running (m, l) + acc rescale
+                    r = hh * g
+                    cyc = hw.vec_softmax_cycles(r, page) + r * (
+                        2 * hw.vec_ew_cost + e / hw.vec_lanes * 2
+                    )
+                    ops = hw.vec_ops_softmax(r, page) + 2 * r * e
+                    if kv_quant:
+                        cyc += 2 * r * page / hw.vec_lanes * hw.vec_ew_cost
+                        ops += 2 * r * page
+                    pj = emit(unit="VEC", cycles=cyc, deps=(sj,),
+                              tag=f"P{st}.{s}.{ht}.{j}", vec_ops=ops,
+                              l1_bytes=2 * r * page * bpe)
+                    vd = dma_page(page_b, deps=prev_step,
+                                  tag=f"V{st}.{s}.{ht}.{j}")
+                    deps = [pj, vd] + (
+                        [prev_acc] if prev_acc is not None else [])
+                    prev_acc = emit(unit="MAC",
+                                    cycles=hh * hw.mac_cycles(g, page, e),
+                                    deps=tuple(deps),
+                                    tag=f"A{st}.{s}.{ht}.{j}",
+                                    mac_ops=hh * g * page * e,
+                                    l1_bytes=(g * page + page * e + g * e)
+                                    * hh * bpe)
+                step_sinks.append(
+                    emit(unit="DMA", cycles=q_b / dma_bpc, deps=(prev_acc,),
+                         tag=f"O{st}.{s}.{ht}", dram_write_bytes=q_b,
+                         l1_bytes=q_b))
+        # ring all-gather of the step's head outputs: shard - 1 SERIAL
+        # hops on the LINK stream, gating everything in the next step
+        prev = tuple(step_sinks)
+        for hop in range(shard - 1):
+            prev = (emit(unit="LINK",
+                         cycles=hw.link_setup_cycles + hop_b / link_bpc,
+                         deps=prev, tag=f"G{st}.{hop}"),)
+        prev_step = prev
+    return tasks
+
+
+# ---------------------------------------------------------------------------
 # Chunked paged prefill: admit one prompt in chunks, decode interleaved.
 # ---------------------------------------------------------------------------
 
@@ -1133,6 +1261,7 @@ _BUILDERS = {
     "chunked_prefill": build_chunked_prefill,
     "speculative_decode": build_speculative_decode,
     "shared_prefix": build_shared_prefix,
+    "sharded_serving": build_sharded_serving,
 }
 
 
@@ -1168,6 +1297,12 @@ def tiling_space(w: AttentionWorkload, hw: HWConfig) -> list[Tiling]:
     index, searched jointly with page size and precision, with 0.0
     (sharing off) in the space so the search decides whether a reserve
     pays at the workload's hit rate.
+
+    Sharded-serving workloads add the SHARD DEGREE as an eighth factor
+    (DESIGN.md §11): mesh chips the KV heads split across, searched
+    jointly with page size and precision over the degrees that divide
+    the head count, with 1 (single chip) in the space so the search
+    decides whether the interconnect can pay for a mesh at all.
     """
     heads_core = -(-w.heads // hw.cores)
     hhs = sorted({h for h in (1, 2, 4, 8, 16) if h <= heads_core}
@@ -1211,6 +1346,19 @@ def tiling_space(w: AttentionWorkload, hw: HWConfig) -> list[Tiling]:
         return [Tiling(hh, 1, p, bpe, None, k)
                 for hh in hhs for p in pages for bpe in bpes
                 for k in specs]
+    if isinstance(w, ShardedServingWorkload):
+        # Mesh schedule: the SHARD DEGREE joins page size, kv-head tile
+        # and precision as the eighth factor (DESIGN.md §11). Only
+        # degrees dividing the KV-head count are feasible (the pool's
+        # Hkv axis is the shard dim); 1 (single chip) stays in the
+        # space, so the search itself decides whether the link pays.
+        pages = sorted({p for p in (16, 32, 64, 128, 256, 512)
+                        if p <= w.seq} | {w.seq})
+        bpes = sorted({hw.bytes_per_elem, 1})
+        shards = sorted({s for s in (1, 2, 4, 8) if w.heads % s == 0})
+        return [Tiling(hh, 1, p, bpe, None, None, None, s)
+                for hh in hhs for p in pages for bpe in bpes
+                for s in shards]
     if isinstance(w, PagedDecodeWorkload):
         pages = sorted({p for p in (16, 32, 64, 128, 256, 512)
                         if p <= w.seq} | {w.seq})

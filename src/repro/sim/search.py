@@ -71,17 +71,19 @@ def random_search(method, w, hw, iters=200, seed=0, objective="cycles"):
 
 def _factor_levels(space) -> list[list]:
     """Per-tier value sets of the tiling space
-    (H_h, N_Q, N_KV, kv_bpe, chunk, spec, cache_frac).
+    (H_h, N_Q, N_KV, kv_bpe, chunk, spec, cache_frac, shard).
 
-    kv_bpe/chunk/spec/cache_frac sort with ``None`` (native precision /
-    monolithic admission / plain decode / sharing off) first so the
-    level ordering is deterministic for spaces that don't search them;
-    the fifth gene widens the MCTS tree and the GA genome only for
-    chunked-prefill workloads (DESIGN.md §6), where it carries the
-    prompt-chunk size, the sixth only for speculative-decode workloads
-    (DESIGN.md §9), where it carries the verify depth, and the seventh
-    only for shared-prefix workloads (DESIGN.md §10), where it carries
-    the pool fraction reserved for the prefix cache.
+    kv_bpe/chunk/spec/cache_frac/shard sort with ``None`` (native
+    precision / monolithic admission / plain decode / sharing off /
+    single chip) first so the level ordering is deterministic for
+    spaces that don't search them; the fifth gene widens the MCTS tree
+    and the GA genome only for chunked-prefill workloads (DESIGN.md
+    §6), where it carries the prompt-chunk size, the sixth only for
+    speculative-decode workloads (DESIGN.md §9), where it carries the
+    verify depth, the seventh only for shared-prefix workloads
+    (DESIGN.md §10), where it carries the pool fraction reserved for
+    the prefix cache, and the eighth only for sharded-serving
+    workloads (DESIGN.md §11), where it carries the mesh shard degree.
     """
     hhs = sorted({t.hh for t in space})
     nqs = sorted({t.nq for t in space})
@@ -91,7 +93,8 @@ def _factor_levels(space) -> list[list]:
     chunks = sorted({t.chunk for t in space}, key=none_first)
     specs = sorted({t.spec for t in space}, key=none_first)
     fracs = sorted({t.cache_frac for t in space}, key=none_first)
-    return [hhs, nqs, nkvs, bpes, chunks, specs, fracs]
+    shards = sorted({t.shard for t in space}, key=none_first)
+    return [hhs, nqs, nkvs, bpes, chunks, specs, fracs, shards]
 
 
 def mcts_search(method, w, hw, iters=400, seed=0, c_ucb=1.2,
@@ -104,8 +107,9 @@ def mcts_search(method, w, hw, iters=400, seed=0, c_ucb=1.2,
     the prefill chunk size (chunked-admission workloads, DESIGN.md §6),
     level 6 the speculation depth (speculative-decode workloads,
     DESIGN.md §9), level 7 the cache-reserve fraction (shared-prefix
-    workloads, DESIGN.md §10); rollouts complete the remaining levels
-    uniformly; rewards back-propagate 1/cycles.
+    workloads, DESIGN.md §10), level 8 the mesh shard degree
+    (sharded-serving workloads, DESIGN.md §11); rollouts complete the
+    remaining levels uniformly; rewards back-propagate 1/cycles.
     """
     rng = random.Random(seed)
     space = tiling_space(w, hw)
@@ -153,7 +157,7 @@ def mcts_search(method, w, hw, iters=400, seed=0, c_ucb=1.2,
 def ga_search(method, w, hw, iters=400, seed=0, pop=24,
               objective="cycles") -> SearchResult:
     """Genetic search: genome = (hh, nq, nkv, kv_bpe, chunk, spec,
-    cache_frac); tournament + crossover +
+    cache_frac, shard); tournament + crossover +
     mutation. (The paper's GA refines compute orderings of the analysis
     tree; our schedules fix the Alg. 1 order, so GA here explores the
     same genome space as MCTS — convergence comparison stays meaningful.)

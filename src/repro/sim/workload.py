@@ -345,6 +345,83 @@ class SharedPrefixWorkload:
             self._prefill_elems + self._decode_elems)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedServingWorkload:
+    """A serial run of decode steps on a KV-head-sharded mesh (§11).
+
+    ``shard`` chips each own ``heads / shard`` KV heads of the paged
+    pool, so one decode step's MAC / VEC / page-DMA work divides by the
+    shard degree — but every step ends with a ring all-gather of the
+    per-head attention outputs (``shard - 1`` serial hops on the LINK
+    stream, each paying ``hw.link_setup_cycles`` plus its payload over
+    ``hw.link_gbps``) before the replicated output projection can run.
+    ``n_steps`` decode steps run back-to-back (each step's gather gates
+    the next step's compute, exactly the engine's serial greedy loop),
+    so minimizing simulated cycles trades per-chip compute shrink
+    against per-step collective growth: the EIGHTH searchable tiling
+    factor (``Tiling.shard``) has an interior optimum that moves with
+    the link bandwidth — near-zero bandwidth collapses to one chip,
+    fat links buy more.
+
+    ``heads`` counts KV heads (the shard dimension of the
+    ``(Hkv, P, page, E)`` pool layout); ``group`` is the GQA group;
+    ``shard`` here is the workload's PIN (None -> the search supplies
+    it via ``Tiling.shard``). ``out_bpe`` is the element width of the
+    gathered attention outputs (the model compute dtype — gathering
+    moves activations, not KV pages).
+    """
+
+    name: str
+    heads: int
+    emb: int
+    kv_lens: tuple[int, ...]      # per-sequence live cache lengths
+    group: int = 1
+    kv_bpe: int | None = None
+    n_steps: int = 16             # serial decode steps priced
+    shard: int | None = None      # pinned degree; None -> Tiling.shard
+    out_bpe: int = 2              # gathered head-output element width
+
+    @property
+    def batch(self) -> int:
+        return len(self.kv_lens)
+
+    @property
+    def seq(self) -> int:
+        """Longest live sequence — anchors the tiling search space."""
+        return max(self.kv_lens)
+
+    @property
+    def total_kv(self) -> int:
+        return sum(self.kv_lens)
+
+    @property
+    def mac_ops(self) -> int:
+        """Useful MACs across the whole run (all chips, all steps)."""
+        return 2 * self.heads * self.group * self.total_kv * self.emb \
+            * self.n_steps
+
+    @property
+    def softmax_elems(self) -> int:
+        return self.heads * self.group * self.total_kv * self.n_steps
+
+    def kv_bytes(self, bpe: int, page: int) -> int:
+        """Page-granular K+V DMA for ONE step across ALL chips — the
+        per-chip schedule divides this by the shard degree. Same
+        accounting as ``PagedDecodeWorkload``."""
+        pages = sum(-(-n // page) for n in self.kv_lens)
+        eff = self.kv_bpe or bpe
+        nbytes = 2 * self.heads * pages * page * self.emb * eff
+        if self.kv_bpe is not None and self.kv_bpe < bpe:
+            nbytes += 2 * self.heads * pages * 4  # fp32 page scales
+        return nbytes
+
+    def gather_bytes(self, shard: int) -> int:
+        """LINK bytes one chip RECEIVES per step in the ring all-gather
+        of head outputs: (shard - 1) hops of one chip's slice each."""
+        full = self.batch * self.heads * self.group * self.emb * self.out_bpe
+        return (shard - 1) * (full // shard)
+
+
 def serving_phase_workloads(name: str, prompt_lens, max_new: int, *,
                             heads: int, emb: int, group: int = 1,
                             batch: int = 4, kv_bpe: int | None = None,

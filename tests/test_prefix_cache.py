@@ -592,7 +592,10 @@ def test_tiling_space_carries_cache_frac_only_for_shared_prefix():
     fracs = {t.cache_frac for t in space}
     assert 0.0 in fracs and max(fracs) > 0.0
     levels = _factor_levels(space)
-    assert len(levels) == 7 and levels[6][0] == 0.0
+    # eighth level is the shard degree (DESIGN.md §11): a single
+    # [None] for non-sharded workloads like this one
+    assert len(levels) == 8 and levels[6][0] == 0.0
+    assert levels[7] == [None]
     from repro.sim.workload import AttentionWorkload
     dense = tiling_space(AttentionWorkload("d", 8, 64, 128), EDGE_HW)
     assert {t.cache_frac for t in dense} == {None}
